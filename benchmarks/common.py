@@ -1,0 +1,94 @@
+"""Shared scenario builders + result caching for the paper benchmarks.
+
+All network scenarios follow paper Table 1 defaults: 4 ToR x 4 spine,
+10 Gbps, 32 nodes arranged as 4 parallel rings of 8 (the 8x4 logical 2-D),
+chunk 8 MB, RED(50/100KB, 0.2), DCQCN-style CC, tau=0.25, T_win=100us,
+k=0.01.  Larger scales (128 nodes = 32x4) follow the same pattern.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core.netsim import (SimParams, WorkloadBuilder, make_leaf_spine,
+                               metrics, scale_for_hosts, simulate,
+                               simulate_seeds)
+
+CACHE = Path(__file__).resolve().parent / ".cache.json"
+QUICK = os.environ.get("BENCH_QUICK", "0") != "0"
+
+
+def cached(name: str, fn):
+    cache = json.loads(CACHE.read_text()) if CACHE.exists() else {}
+    key = f"{name}{'::quick' if QUICK else ''}"
+    if key in cache:
+        return cache[key]
+    t0 = time.time()
+    out = fn()
+    out["_wall_s"] = round(time.time() - t0, 1)
+    cache[key] = out
+    CACHE.write_text(json.dumps(cache, indent=1))
+    return out
+
+
+def table1_topo(n_hosts: int = 32):
+    if n_hosts == 32:
+        return make_leaf_spine(32, 4, 4)
+    return scale_for_hosts(n_hosts)
+
+
+def table1_workload(n_hosts: int = 32, ring: int = 8, chunk: float = 8e6,
+                    passes: int = 8, barrier: bool = False,
+                    compute_gap: float = 0.0,
+                    chunk_schedule=None):
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(n_hosts)), ring_size=ring,
+                   chunk_bytes=chunk_schedule if chunk_schedule is not None
+                   else chunk,
+                   passes=passes, barrier=barrier, compute_gap=compute_gap)
+    return b.build()
+
+
+def default_params(n_ticks: int, sym: bool = False, **kw) -> SimParams:
+    return SimParams(n_ticks=n_ticks, window=64, sym_on=sym, **kw)
+
+
+def params_for_seconds(horizon_s: float, sym: bool = False,
+                       coarse: bool = False, **kw) -> SimParams:
+    """coarse=True runs at 20 us ticks (halves cost for multi-second JCT
+    scenarios; control-loop windows rescaled to keep T_win=100us, 40us CC
+    epochs)."""
+    dt = 20e-6 if coarse else 10e-6
+    extra = dict(sym_win_ticks=5, cc_epoch_ticks=2) if coarse else {}
+    extra.update(kw)
+    return SimParams(n_ticks=int(horizon_s / dt) // 20 * 20, dt=dt,
+                     window=64, sym_on=sym, **extra)
+
+
+def run_one(topo, wl, cfg, routing="ecmp", seed=0, **bg):
+    res = simulate(topo, wl, cfg, routing=routing, seed=seed, **bg)
+    return jax.block_until_ready(res)
+
+
+def summarize(res, wl, cfg, job=0):
+    cct = metrics.cct_seconds(res, wl, cfg)
+    return {
+        "cct_s": float(cct[job]) if np.isfinite(cct[job]) else None,
+        "max_overlap": int(metrics.max_overlap(res, cfg, job)),
+        "ideal_s": metrics.ideal_cct(wl, job, 10e9 / 8),
+    }
+
+
+def seeds_for(n_full: int, n_quick: int = 3):
+    return list(range(n_quick if QUICK else n_full))
+
+
+def run_seeds(topo, wl, cfg, routing, seeds, **bg):
+    """Batched multi-seed run (vmap)."""
+    res = simulate_seeds(topo, wl, cfg, routing, seeds, **bg)
+    return jax.block_until_ready(res)

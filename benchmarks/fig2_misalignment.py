@@ -1,0 +1,52 @@
+"""Paper Fig. 2: step misalignment under different network conditions.
+
+Scenarios: Theoretical (lockstep bound), Baseline (ECMP), Load Imbalance
+(1.13x skew on one uplink, static balanced routing), Transient Congestion
+(light square-wave background, static balanced routing).
+
+Paper targets: baseline overlap snowballs to ~30 and CCT inflates ~60%;
+light perturbations reach ~10 overlap / ~7% CCT inflation.
+"""
+import numpy as np
+
+from .common import (QUICK, cached, default_params, run_one, summarize,
+                     table1_topo, table1_workload)
+
+
+def run():
+    topo = table1_topo(32)
+    passes = 4 if QUICK else 6
+    wl = table1_workload(passes=passes)
+    from repro.core.netsim import metrics
+    ideal = metrics.ideal_cct(wl, 0, 10e9 / 8)
+    horizon = int(ideal * 4.0 / 10e-6)
+    cfg = default_params(horizon)
+
+    rows = {}
+    rows["theoretical"] = {"cct_s": ideal, "max_overlap": 1, "ideal_s": ideal}
+
+    # baseline ECMP
+    rows["baseline_ecmp"] = summarize(run_one(topo, wl, cfg, "ecmp", 3),
+                                      wl, cfg)
+    # load imbalance 1.13x on one uplink
+    bg = np.zeros(topo.n_links)
+    up0 = topo.uplink(1, 0)
+    bg[up0] = 0.13 * topo.link_cap[up0]
+    rows["load_imbalance_1.13"] = summarize(
+        run_one(topo, wl, cfg, "balanced", 3, bg_base=bg), wl, cfg)
+    # transient congestion: 50% line-rate bursts, 30% duty, 10 ms period
+    amp = np.zeros(topo.n_links)
+    for t, s in [(0, 1), (2, 3)]:
+        amp[topo.uplink(t, s)] = 0.5 * topo.link_cap[up0]
+    rows["congestion_transient"] = summarize(
+        run_one(topo, wl, cfg, "balanced", 3, bg_amp=amp, bg_period=10e-3,
+                bg_duty=0.3), wl, cfg)
+
+    for k, v in rows.items():
+        if v["cct_s"]:
+            v["cct_inflation"] = round(v["cct_s"] / ideal - 1, 3)
+    return rows
+
+
+def bench():
+    return cached("fig2_misalignment", run)

@@ -1,0 +1,40 @@
+"""Paper Fig. 6: compute-bound Transformer JCT vs computation-reduction
+ratio (simulating faster accelerators).  Target: normalized JCT approaches
+~0.7 of baseline as compute shrinks 64x."""
+import numpy as np
+
+from repro.core.netsim import metrics
+
+from .common import (QUICK, cached, params_for_seconds, run_seeds,
+                     seeds_for, table1_topo)
+from .table2_e2e import TRANSFORMER_BUCKETS, _jobs
+
+
+def run():
+    hosts, ring = 32, 8
+    topo = table1_topo(hosts)
+    iters = 2
+    seeds = seeds_for(5, 2)
+    ratios = [1, 8, 64] if QUICK else [1, 4, 16, 64]
+    base_gap = 0.4
+    out = {}
+    for r in ratios:
+        gap = base_gap / r / len(TRANSFORMER_BUCKETS)
+        wl = _jobs(hosts, TRANSFORMER_BUCKETS, gap, iters, ring)
+        ideal = metrics.ideal_cct(wl, 0, 10e9 / 8)
+        cfg_b = params_for_seconds(min(ideal * 3 + 0.2, 4.0), coarse=True)
+        cfg_s = params_for_seconds(min(ideal * 3 + 0.2, 4.0), sym=True,
+                                   coarse=True)
+        b = run_seeds(topo, wl, cfg_b, "ecmp", seeds)
+        s = run_seeds(topo, wl, cfg_s, "ecmp", seeds)
+        jb = np.nanmean(metrics.cct_seconds(b, wl, cfg_b)[:, 0])
+        js = np.nanmean(metrics.cct_seconds(s, wl, cfg_s)[:, 0])
+        out[f"reduction_{r}x"] = {
+            "normalized_jct": round(float(js / jb), 4)
+            if np.isfinite(jb) and np.isfinite(js) else None,
+        }
+    return out
+
+
+def bench():
+    return cached("fig6_commratio", run)

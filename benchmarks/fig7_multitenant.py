@@ -1,0 +1,75 @@
+"""Paper Fig. 7: multi-tenant workloads.
+
+(a/b) two identical co-located jobs (B starts 500 ms after A): Symphony keeps
+aggregate throughput high and shrinks the final-step span (tail).
+(c) random job arrivals at mixed scales: improvement grows with job scale.
+"""
+import numpy as np
+
+from repro.core.netsim import WorkloadBuilder, metrics
+
+from .common import (QUICK, cached, default_params, run_seeds, seeds_for,
+                     table1_topo)
+
+
+def _two_job_wl(n_hosts=64, ring=8, chunk=8e6, passes=3, delay=0.1):
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(n_hosts)), ring_size=ring,
+                   chunk_bytes=chunk, passes=passes, barrier=False)
+    b.add_ring_job(hosts=list(range(n_hosts)), ring_size=ring,
+                   chunk_bytes=chunk, passes=passes, barrier=False,
+                   start_time=delay)
+    return b.build()
+
+
+def run():
+    out = {}
+    # ---- two-job co-location
+    hosts = 32 if QUICK else 64
+    topo = table1_topo(hosts)
+    passes = 2 if QUICK else 3
+    wl = _two_job_wl(hosts, passes=passes)
+    horizon = int((0.15 * passes + 0.8) / 10e-6)
+    seeds = seeds_for(10, 3)
+    for name, cfg in [("baseline", default_params(horizon)),
+                      ("symphony", default_params(horizon, sym=True))]:
+        res = run_seeds(topo, wl, cfg, "ecmp", seeds)
+        cct = metrics.cct_seconds(res, wl, cfg)
+        spans = [metrics.flow_span_seconds(res, wl, cfg, job=j)
+                 for j in (0, 1)]
+        out[f"two_job_{name}"] = {
+            "jobA_cct_mean_s": float(np.nanmean(cct[:, 0])),
+            "jobB_cct_mean_s": float(np.nanmean(cct[:, 1])),
+            "final_step_span_mean_s": float(np.mean(
+                [np.mean(s) for s in spans])),
+        }
+    b, s = out["two_job_baseline"], out["two_job_symphony"]
+    out["span_reduction"] = round(
+        1 - s["final_step_span_mean_s"] / b["final_step_span_mean_s"], 3)
+
+    # ---- scale sweep: co-located jobs of increasing size
+    scales = [16, 32] if QUICK else [16, 32, 64]
+    for n in scales:
+        topo = table1_topo(max(n * 2, 32))
+        b2 = WorkloadBuilder()
+        b2.add_ring_job(hosts=list(range(n)), ring_size=min(8, n),
+                        chunk_bytes=8e6, passes=2, barrier=False)
+        b2.add_ring_job(hosts=list(range(n, 2 * n)), ring_size=min(8, n),
+                        chunk_bytes=4e6, passes=3, barrier=False,
+                        start_time=0.02)
+        wl2 = b2.build()
+        horizon = int(0.9 / 10e-6)
+        cfg_b = default_params(horizon)
+        cfg_s = default_params(horizon, sym=True)
+        rb = run_seeds(topo, wl2, cfg_b, "ecmp", seeds)
+        rs = run_seeds(topo, wl2, cfg_s, "ecmp", seeds)
+        jb = metrics.cct_seconds(rb, wl2, cfg_b)[:, 0]
+        js = metrics.cct_seconds(rs, wl2, cfg_s)[:, 0]
+        out[f"scale_{n}"] = {
+            "jct_improvement": round(1 - np.nanmedian(js) / np.nanmedian(jb), 4)
+            if np.isfinite(np.nanmedian(jb)) else None}
+    return out
+
+
+def bench():
+    return cached("fig7_multitenant", run)

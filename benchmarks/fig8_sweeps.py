@@ -1,0 +1,76 @@
+"""Paper Fig. 8: robustness sweeps.
+
+(a) load-imbalance ratio 1.1x-1.7x: Symphony's relative gain grows with
+    imbalance;
+(b) throttling gain k: broad sweet spot 1e-3..1e-2, degradation at extremes;
+(c) chunk size: gains grow with chunk >= 512 kB, vanish at 128 kB.
+"""
+import numpy as np
+
+from repro.core.netsim import metrics
+from repro.core.symphony import SymphonyParams
+
+from .common import (QUICK, cached, default_params, run_seeds, seeds_for,
+                     table1_topo, table1_workload)
+
+
+def _gain(topo, wl, cfg_b, cfg_s, seeds, routing="ecmp", **bg):
+    rb = run_seeds(topo, wl, cfg_b, routing, seeds, **bg)
+    rs = run_seeds(topo, wl, cfg_s, routing, seeds, **bg)
+    jb = np.nanmedian(metrics.cct_seconds(rb, wl, cfg_b)[:, 0])
+    js = np.nanmedian(metrics.cct_seconds(rs, wl, cfg_s)[:, 0])
+    if not (np.isfinite(jb) and np.isfinite(js)):
+        return None
+    return round(float(1 - js / jb), 4)
+
+
+def run():
+    out = {}
+    seeds = seeds_for(8, 2)
+    hosts = 32 if QUICK else 64
+    topo = table1_topo(hosts)
+    ring = 8 if hosts == 32 else 32
+    passes = 3 if QUICK else 4
+    wl = table1_workload(n_hosts=hosts, ring=ring, passes=passes,
+                         barrier=False)
+    horizon = int((0.12 * passes + 0.6) / 10e-6)
+
+    # (a) load imbalance: background share on one uplink, balanced routing
+    for ratio in ([1.1, 1.4, 1.7] if QUICK else [1.1, 1.3, 1.5, 1.7]):
+        bg = np.zeros(topo.n_links)
+        up = topo.uplink(0, 0)
+        bg[up] = (ratio - 1.0) * topo.link_cap[up]
+        g = _gain(topo, wl, default_params(horizon),
+                  default_params(horizon, sym=True), seeds,
+                  routing="balanced", bg_base=bg)
+        out[f"imbalance_{ratio}"] = {"jct_improvement": g}
+
+    # (b) k sweep on 2-D ring pattern
+    d0 = 8 if hosts == 32 else 16
+    d1 = hosts // d0
+    from repro.core.netsim import WorkloadBuilder
+    b2 = WorkloadBuilder()
+    b2.add_ring_job(hosts=list(range(hosts)), ring_size=d0, passes=passes,
+                    chunk_bytes=8e6, dims=(d0, d1))
+    wl2 = b2.build()
+    horizon2 = int((0.25 * passes + 0.6) / 10e-6)
+    for k in ([1e-4, 1e-3, 1e-2, 1e-1] if not QUICK else [1e-3, 1e-2, 1e-1]):
+        cfg_s = default_params(horizon2, sym=True)._replace(
+            sym=SymphonyParams(k=k))
+        g = _gain(topo, wl2, default_params(horizon2), cfg_s, seeds)
+        out[f"k_{k:g}"] = {"jct_improvement": g}
+
+    # (c) chunk-size sweep
+    for chunk in ([128e3, 512e3, 8e6] if QUICK
+                  else [128e3, 512e3, 2e6, 8e6]):
+        wl3 = table1_workload(n_hosts=hosts, ring=ring,
+                              passes=passes, chunk=chunk, barrier=False)
+        hz = int((0.12 * passes * chunk / 8e6 + 0.4) / 10e-6)
+        g = _gain(topo, wl3, default_params(hz),
+                  default_params(hz, sym=True), seeds)
+        out[f"chunk_{int(chunk/1e3)}kB"] = {"cct_improvement": g}
+    return out
+
+
+def bench():
+    return cached("fig8_sweeps", run)

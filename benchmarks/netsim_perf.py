@@ -1,0 +1,40 @@
+"""Simulator performance benchmark: ticks/second for the Table-1 scenario
+(single run and vmapped over seeds) — the §Perf record for the netsim layer."""
+import time
+
+import jax
+
+from repro.core.netsim import simulate, simulate_seeds
+
+from .common import cached, default_params, table1_topo, table1_workload
+
+
+def run():
+    topo = table1_topo(32)
+    wl = table1_workload(passes=2, barrier=False)
+    n_ticks = 30_000
+    cfg = default_params(n_ticks, sym=True)
+
+    t0 = time.time()
+    jax.block_until_ready(simulate(topo, wl, cfg, "ecmp", 0))
+    cold = time.time() - t0
+    t0 = time.time()
+    jax.block_until_ready(simulate(topo, wl, cfg, "ecmp", 1))
+    warm = time.time() - t0
+
+    seeds = list(range(8))
+    t0 = time.time()
+    jax.block_until_ready(simulate_seeds(topo, wl, cfg, "ecmp", seeds))
+    batch = time.time() - t0
+    return {
+        "compile_plus_run_s": round(cold, 2),
+        "single_run_s": round(warm, 2),
+        "ticks_per_s_single": round(n_ticks / warm),
+        "vmap8_runs_s": round(batch, 2),
+        "ticks_per_s_vmap8": round(8 * n_ticks / batch),
+        "vmap_speedup": round(8 * warm / batch, 2),
+    }
+
+
+def bench():
+    return cached("netsim_perf", run)

@@ -1,0 +1,47 @@
+"""Render the §Roofline table into EXPERIMENTS.md from dryrun_results.json."""
+import json
+import re
+from pathlib import Path
+
+from .roofline import rows
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def table_md() -> str:
+    lines = [
+        "| cell | tC (ms) | tM (ms) | tX (ms) | bottleneck | useful | "
+        "roofline frac | mem GiB (prod.) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows("single"):
+        cell = r["cell"].rsplit("/", 1)[0]
+        if "skipped" in r:
+            lines.append(f"| {cell} | — | — | — | skipped | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {cell} | ERROR {r['error'][:40]} |")
+            continue
+        src = "" if r.get("cost_source") == "roofline" else " †"
+        lines.append(
+            f"| {cell}{src} | {r['t_compute_ms']} | {r['t_memory_ms']} | "
+            f"{r['t_collective_ms']} | {r['bottleneck']} | "
+            f"{r['useful_ratio']} | {r['roofline_frac']} | "
+            f"{r['mem_gib']} |")
+    lines.append("")
+    lines.append("† cost terms from the production (scanned) lowering — "
+                 "loop bodies counted once; treat as lower bounds.")
+    return "\n".join(lines)
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = re.sub(r"<!-- ROOFLINE_TABLE -->(.|\n)*?(?=\n## )",
+                "<!-- ROOFLINE_TABLE -->\n\n" + table_md() + "\n\n",
+                md, count=1)
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print(table_md())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), all in seconds per step:
+  t_compute    = HLO_FLOPs_total / (chips * 197e12)       [bf16 peak, v5e]
+  t_memory     = HLO_bytes_total / (chips * 819e9)
+  t_collective = wire_bytes_total / (chips * 50e9)        [ICI per link]
+
+cost_analysis() reports the per-device program, so *_total = per_device *
+chips and the chips cancel: the terms below use per-device values directly.
+Also reports MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+import json
+from pathlib import Path
+
+from .common import cached
+
+RESULTS = Path(__file__).resolve().parents[1] / "dryrun_results.json"
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def model_flops_per_step(rec) -> float:
+    """6 * N(_active) * tokens for train (fwd+bwd); 2 * N * tokens for
+    inference shapes."""
+    n = rec["active_params"]
+    shape = rec["shape"]
+    if shape.startswith("train"):
+        tokens = 256 * 4096
+        mult = 6.0
+    elif shape.startswith("prefill"):
+        tokens = 32 * 32768
+        mult = 2.0
+    elif shape == "decode_32k":
+        tokens = 128
+        mult = 2.0
+    else:
+        tokens = 1
+        mult = 2.0
+    return mult * n * tokens
+
+
+def rows(mesh: str = "single"):
+    """Cost terms prefer the loop-free '/roofline' records (exact trip
+    counts); memory always comes from the production '/single' lowering."""
+    data = json.loads(RESULTS.read_text())
+    out = []
+    for key, rec in sorted(data.items()):
+        if not key.endswith(f"/{mesh}"):
+            continue
+        if rec.get("skipped"):
+            out.append({"cell": key, "skipped": rec["skipped"]})
+            continue
+        if not rec.get("ok"):
+            out.append({"cell": key, "error": rec.get("error", "?")[:100]})
+            continue
+        rl = data.get(key.rsplit("/", 1)[0] + "/roofline")
+        src = rl if (mesh == "single" and rl and rl.get("ok")
+                     and not rl.get("skipped")) else rec
+        chips = src["chips"]
+        t_c = src["flops_per_device"] / PEAK
+        t_m = src["bytes_per_device"] / HBM
+        t_x = src["wire_bytes_per_device"] / ICI
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops_per_step(src)
+        hlo_total = src["flops_per_device"] * chips
+        out.append({
+            "cell": key,
+            "t_compute_ms": round(t_c * 1e3, 2),
+            "t_memory_ms": round(t_m * 1e3, 2),
+            "t_collective_ms": round(t_x * 1e3, 2),
+            "bottleneck": dom,
+            "model_flops": mf,
+            "useful_ratio": round(mf / hlo_total, 3) if hlo_total else None,
+            "roofline_frac": round(
+                max(t_c, 1e-12) / max(t_c, t_m, t_x), 3),
+            "mem_gib": round(rec["memory"]["per_device_total"] / 2**30, 2),
+            "fits_v5e": rec["memory"]["fits_v5e"],
+            "cost_source": "roofline" if src is rl else "production",
+        })
+    return out
+
+
+def bench():
+    return {"rows": rows("single")}

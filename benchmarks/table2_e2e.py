@@ -1,0 +1,78 @@
+"""Paper Table 2: end-to-end data-parallel training, gradient-sync phase.
+
+Workloads mirror the Astra-Sim suite: VGG16 (large uneven gradient buckets,
+comm-bound), ResNet50 (smaller buckets), Transformer (hybrid DP+MP,
+compute-bound).  Gradient bucket schedules are derived from the real layer
+shapes; the compute gap models the per-iteration forward+backward time.
+
+Paper targets (JCT reduction): VGG-128 50.2%, VGG-512 54.4%, ResNet-128
+24.3%, ResNet-512 20.8%, Transformer ~0.07%.
+"""
+import numpy as np
+
+from repro.core.netsim import metrics
+
+from .common import (QUICK, cached, params_for_seconds, run_seeds,
+                     seeds_for, table1_topo, table1_workload)
+
+# per-iteration all-reduce bucket sizes (bytes/node), fp16 grads, bucketed
+# at ~25MB like DDP: VGG16 ~138M params dominated by fc1 (102M); ResNet50
+# ~25.6M params.
+VGG_BUCKETS = [52e6, 52e6, 52e6, 52e6, 25e6, 20e6, 12e6, 8e6, 4e6]
+RESNET_BUCKETS = [13e6, 13e6, 13e6, 9e6, 3e6]
+TRANSFORMER_BUCKETS = [16e6, 16e6, 16e6, 16e6]
+
+
+def _jobs(n_hosts, buckets, gap, iters, ring):
+    """One iteration = len(buckets) collectives (per-bucket chunk schedule)
+    + a compute gap before each iteration."""
+    sched = list(np.repeat(buckets, 1)) * iters
+    # chunk per step = bucket / ring members
+    sched = [b / ring for b in sched]
+    wl = table1_workload(n_hosts=n_hosts, ring=ring, passes=len(sched),
+                         barrier=True, compute_gap=gap,
+                         chunk_schedule=sched)
+    # gap applies before every pass; we want it per ITERATION only: emulate
+    # by folding the gap into the first bucket of each iteration is complex;
+    # instead scale the gap down by buckets/iter.
+    return wl
+
+
+def run():
+    iters = 2 if QUICK else 4
+    seeds = seeds_for(8, 2)
+    out = {}
+    cases = [
+        ("vgg_128", 128, VGG_BUCKETS, 0.030),
+        ("resnet_128", 128, RESNET_BUCKETS, 0.060),
+        ("transformer_128", 128, TRANSFORMER_BUCKETS, 1.5),
+    ]
+    if not QUICK:
+        # 512-node case: VGG only (the paper's headline cell); resnet_512
+        # omitted from the default suite for wall-clock (same machinery).
+        cases += [("vgg_512", 512, VGG_BUCKETS, 0.030)]
+    for name, hosts, buckets, gap in cases:
+        ring = 8 if hosts == 32 else 32
+        topo = table1_topo(hosts)
+        gap_per_pass = gap / len(buckets)
+        wl = _jobs(hosts, buckets, gap_per_pass, iters, ring)
+        ideal = metrics.ideal_cct(wl, 0, 10e9 / 8)
+        cfg_b = params_for_seconds(min(ideal * 3.0 + 0.3, 6.0), coarse=True)
+        cfg_s = params_for_seconds(min(ideal * 3.0 + 0.3, 6.0), sym=True,
+                                   coarse=True)
+        base = run_seeds(topo, wl, cfg_b, "ecmp", seeds)
+        sym = run_seeds(topo, wl, cfg_s, "ecmp", seeds)
+        jb = metrics.cct_seconds(base, wl, cfg_b)[:, 0]
+        js = metrics.cct_seconds(sym, wl, cfg_s)[:, 0]
+        out[name] = {
+            "baseline_jct_s": float(np.nanmean(jb)),
+            "symphony_jct_s": float(np.nanmean(js)),
+            "improvement": round(1 - np.nanmean(js) / np.nanmean(jb), 4)
+            if np.isfinite(np.nanmean(jb)) else None,
+            "ideal_s": ideal,
+        }
+    return out
+
+
+def bench():
+    return cached("table2_e2e", run)

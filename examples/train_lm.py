@@ -1,0 +1,81 @@
+"""End-to-end training driver: train a small LM for a few hundred steps with
+checkpointing, fault injection, and the straggler monitor.
+
+CPU-scaled by default (a ~6M-param danube-family model, 300 steps, ~5 min);
+pass --size 100m for the 100M-class config (what you would run on a TPU
+slice) and --grad-sync ring to use the explicit ppermute ring collectives
+when more than one device is available.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import time
+
+import jax
+
+from repro.config import ModelConfig, ParallelConfig, TrainConfig
+from repro.models import build_model
+from repro.runtime.train import SimulatedFailure, Trainer
+
+SIZES = {
+    "tiny": ModelConfig(name="lm-tiny", family="dense", num_layers=4,
+                        d_model=256, num_heads=4, num_kv_heads=2, d_ff=1024,
+                        vocab_size=2048, attention="gqa"),
+    "100m": ModelConfig(name="lm-100m", family="dense", num_layers=12,
+                        d_model=768, num_heads=12, num_kv_heads=4, d_ff=3072,
+                        vocab_size=32768, attention="gqa"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="tiny", choices=list(SIZES))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--grad-sync", default="xla",
+                    choices=["xla", "ring", "hierarchical"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-failure", action="store_true",
+                    help="simulate a node crash at step 60% through")
+    args = ap.parse_args()
+
+    cfg = SIZES[args.size]
+    tcfg = TrainConfig(global_batch=args.batch, seq_len=args.seq, lr=3e-3,
+                       warmup_steps=20, total_steps=args.steps,
+                       ckpt_every=50, ckpt_dir=args.ckpt_dir,
+                       ckpt_async=True, seed=0)
+    par = ParallelConfig(remat="none", scan_layers=True,
+                         grad_sync=args.grad_sync)
+    mesh = None
+    if args.grad_sync != "xla":
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+    model = build_model(cfg, par, mesh=mesh)
+
+    injector = None
+    if args.inject_failure:
+        fired = {"done": False}
+
+        def injector(step):
+            if step == int(args.steps * 0.6) and not fired["done"]:
+                fired["done"] = True
+                print(f"!! injecting node failure at step {step}")
+                raise SimulatedFailure
+
+    tr = Trainer(model, cfg, tcfg, par, mesh=mesh, failure_injector=injector)
+    print(f"training {cfg.name}: {args.steps} steps, "
+          f"batch {args.batch}x{args.seq}, grad_sync={args.grad_sync}")
+    t0 = time.time()
+    rep = tr.run()
+    dt = time.time() - t0
+    print(f"\nfirst losses: {[round(l, 3) for l in rep.losses[:5]]}")
+    print(f"last  losses: {[round(l, 3) for l in rep.losses[-5:]]}")
+    print(f"steps/s: {rep.steps_run / dt:.2f}   restarts: {rep.restarts}   "
+          f"straggler events: {rep.straggler_events}")
+    assert rep.losses[-1] < rep.losses[0], "loss did not improve"
+    print("loss improved — end-to-end training OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Mesh-agnostic checkpointing: async, atomic, keep-k, CRC-verified,
+elastic-restore (a checkpoint written on one mesh restores onto another).
+
+Layout:  <dir>/step_<n>/
+           manifest.json   {step, tree structure, shapes, dtypes, crcs,
+                            data_state, rng, config fingerprint}
+           <leaf-path>.npy one file per pytree leaf (host numpy)
+
+Writes go to step_<n>.tmp then rename (atomic on POSIX).  `restore` reshapes
+nothing — shapes are mesh-independent because we store the *global* array;
+resharding onto the restore mesh happens via jax.device_put with the target
+sharding (elastic restarts change only the sharding).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import zlib
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def jnp_astype(arr, dtype):
+    import jax.numpy as jnp
+    return jnp.asarray(arr).astype(dtype)
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], prefix + (str(k),))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, prefix + (str(i),))
+    elif hasattr(tree, "_fields"):          # NamedTuple
+        for k in tree._fields:
+            yield from _flatten(getattr(tree, k), prefix + (k,))
+    elif tree is None:
+        return
+    else:
+        yield prefix, tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 async_write: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: dict | None = None):
+        """Snapshot to host memory synchronously, write in background."""
+        leaves = [(path, np.asarray(x)) for path, x in _flatten(tree)]
+        self.wait()
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, leaves, extra or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, leaves, extra or {})
+
+    def _write(self, step: int, leaves, extra: dict):
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "extra": extra, "leaves": {}}
+        for path, arr in leaves:
+            name = "__".join(path) or "root"
+            dtype = str(arr.dtype)
+            if dtype == "bfloat16":   # numpy can't round-trip ml_dtypes
+                arr = arr.view(np.uint16)
+            np.save(tmp / f"{name}.npy", arr)
+            manifest["leaves"][name] = {
+                "shape": list(arr.shape), "dtype": dtype,
+                "crc": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.list_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def list_steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.iterdir()
+                      if p.is_dir() and p.name.startswith("step_")
+                      and not p.name.endswith(".tmp"))
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like_tree, shardings=None, verify=True):
+        """Restore into the structure of `like_tree` (ShapeDtypeStructs or
+        arrays).  `shardings`: matching pytree of NamedShardings for elastic
+        restore onto a (possibly different) mesh."""
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat_like = list(_flatten(like_tree))
+        sh_flat = dict(_flatten(shardings)) if shardings is not None else {}
+        out = {}
+        for path, like in flat_like:
+            name = "__".join(path) or "root"
+            arr = np.load(d / f"{name}.npy")
+            meta = manifest["leaves"][name]
+            if verify:
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                if crc != meta["crc"]:
+                    raise IOError(f"checkpoint corruption in {name}")
+            if meta["dtype"] == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            if tuple(arr.shape) != tuple(like.shape):
+                raise ValueError(f"shape mismatch {name}: "
+                                 f"{arr.shape} vs {like.shape}")
+            sh = sh_flat.get(path)
+            if str(arr.dtype) != str(like.dtype):
+                arr = np.asarray(jnp_astype(arr, like.dtype))
+            out[path] = jax.device_put(arr, sh) if sh is not None else arr
+        return _unflatten_like(like_tree, out), manifest["extra"]
+
+
+def _unflatten_like(like, flat: dict, prefix=()):
+    if isinstance(like, dict):
+        return {k: _unflatten_like(v, flat, prefix + (str(k),))
+                for k, v in like.items()}
+    if hasattr(like, "_fields"):
+        return type(like)(**{k: _unflatten_like(getattr(like, k), flat,
+                                                prefix + (k,))
+                             for k in like._fields})
+    if isinstance(like, (list, tuple)):
+        return type(like)(_unflatten_like(v, flat, prefix + (str(i),))
+                          for i, v in enumerate(like))
+    if like is None:
+        return None
+    return flat[prefix]

@@ -1,0 +1,10 @@
+"""Symphony core: the paper's contribution (Alg. 1 + network simulation)."""
+from .symphony import (Packet, SymphonyParams, SymphonyState, init_state,
+                       marking_probability, process_packet,
+                       process_packet_batch, window_update)
+
+__all__ = [
+    "Packet", "SymphonyParams", "SymphonyState", "init_state",
+    "marking_probability", "process_packet", "process_packet_batch",
+    "window_update",
+]

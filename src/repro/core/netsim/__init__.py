@@ -1,0 +1,11 @@
+from . import metrics, topology, workload
+from .simulator import (SimParams, SimResult, simulate, simulate_core,
+                        simulate_seeds)
+from .topology import Topology, make_leaf_spine, scale_for_hosts
+from .workload import Workload, WorkloadBuilder
+
+__all__ = [
+    "SimParams", "SimResult", "simulate", "simulate_core", "simulate_seeds",
+    "Topology", "make_leaf_spine", "scale_for_hosts",
+    "Workload", "WorkloadBuilder", "metrics", "topology", "workload",
+]

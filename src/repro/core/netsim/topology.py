@@ -1,0 +1,92 @@
+"""Leaf-spine fabric model for the Symphony network simulator.
+
+Link indexing is arithmetic so flow routes are tiny integer tuples instead of
+a dense incidence matrix:
+
+  [0,              H)                 host  h -> ToR(h)      (access up)
+  [H,              2H)                ToR(h) -> host h       (access down)
+  [2H,             2H + T*S)          ToR t -> spine s       (uplink,   t*S+s)
+  [2H + T*S,       2H + 2*T*S)        spine s -> ToR t       (downlink, s*T+t)
+
+Hosts are assigned to ToRs contiguously (hosts_per_tor = H / T).  An optional
+oversubscription factor scales ToR<->spine capacity down relative to access
+links, modeling the paper's 1:2-1:8 multi-pod interconnects (§4.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+DEFAULT_LINK_BPS = 10e9 / 8.0  # 10 Gbps in bytes/s (paper §4.1)
+
+
+@dataclass(frozen=True)
+class Topology:
+    n_hosts: int
+    n_tors: int
+    n_spines: int
+    link_cap: np.ndarray          # [L] bytes/s
+    symphony_mask: np.ndarray     # [L] bool — ports running Symphony (ToR egress)
+
+    @property
+    def hosts_per_tor(self) -> int:
+        return self.n_hosts // self.n_tors
+
+    @property
+    def n_links(self) -> int:
+        return int(self.link_cap.shape[0])
+
+    # ---- link index helpers (host/tor/spine ids -> link id) ----
+    def acc_up(self, host: np.ndarray) -> np.ndarray:
+        return np.asarray(host)
+
+    def acc_down(self, host: np.ndarray) -> np.ndarray:
+        return self.n_hosts + np.asarray(host)
+
+    def uplink(self, tor: np.ndarray, spine: np.ndarray) -> np.ndarray:
+        return 2 * self.n_hosts + np.asarray(tor) * self.n_spines + np.asarray(spine)
+
+    def downlink(self, spine: np.ndarray, tor: np.ndarray) -> np.ndarray:
+        return 2 * self.n_hosts + self.n_tors * self.n_spines \
+            + np.asarray(spine) * self.n_tors + np.asarray(tor)
+
+    def tor_of(self, host: np.ndarray) -> np.ndarray:
+        return np.asarray(host) // self.hosts_per_tor
+
+
+def make_leaf_spine(
+    n_hosts: int = 32,
+    n_tors: int = 4,
+    n_spines: int = 4,
+    link_bps: float = DEFAULT_LINK_BPS,
+    oversubscription: float = 1.0,
+) -> Topology:
+    """Build the paper's default 4 ToR x 4 spine, 32-host fabric (Table 1).
+
+    ``oversubscription`` > 1 shrinks fabric (ToR<->spine) capacity: a value of
+    4 models a 1:4 oversubscribed tier.
+    """
+    if n_hosts % n_tors:
+        raise ValueError(f"hosts ({n_hosts}) must divide evenly over ToRs ({n_tors})")
+    n_fabric = 2 * n_tors * n_spines
+    L = 2 * n_hosts + n_fabric
+    cap = np.full(L, link_bps, np.float64)
+    cap[2 * n_hosts:] = link_bps * (n_hosts / n_tors) / n_spines / oversubscription \
+        if oversubscription != 1.0 else link_bps
+    # Symphony runs on ToR egress ports: uplinks (ToR->spine) and access-down
+    # (ToR->host) — §5 "Practical deployment": ToR-only is sufficient.
+    mask = np.zeros(L, bool)
+    mask[n_hosts:2 * n_hosts] = True            # ToR -> host
+    mask[2 * n_hosts: 2 * n_hosts + n_tors * n_spines] = True  # ToR -> spine
+    return Topology(n_hosts=n_hosts, n_tors=n_tors, n_spines=n_spines,
+                    link_cap=cap, symphony_mask=mask)
+
+
+def scale_for_hosts(n_hosts: int, link_bps: float = DEFAULT_LINK_BPS,
+                    oversubscription: float = 1.0) -> Topology:
+    """Paper-style scaling: 8 hosts per ToR; spines sized to keep the fabric
+    non-blocking at oversubscription=1 (S = hosts_per_tor)."""
+    n_tors = max(2, n_hosts // 8)
+    n_spines = max(2, min(8, n_hosts // n_tors))
+    return make_leaf_spine(n_hosts, n_tors, n_spines, link_bps, oversubscription)

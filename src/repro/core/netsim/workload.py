@@ -1,0 +1,284 @@
+"""Ring-collective workloads for the Symphony simulator.
+
+Model (paper §2.1-2.2):
+
+* A *job* runs a sequence of ring collectives ("passes"); between passes there
+  is an optional compute gap (Table 2's end-to-end model) and a job-wide
+  barrier (gradient sync semantics).
+* Each job owns one or more parallel 1-D rings over its hosts. Ring r of
+  size N performs ``steps_per_pass = 2*(N-1)`` pipelined steps per pass; in
+  each step every member sends one chunk to its successor.
+* A *flow slot* f is one (ring, member): the persistent sender node->successor
+  relationship. Its 5-tuple/path is fixed (per-flow ECMP) or re-hashed per
+  step (per-step ECMP).
+* Crucially, steps pipeline: node i may start sending step s as soon as it has
+  *received* step s-1 (its predecessor finished sending s-1) — it does NOT
+  wait for its own send of s-1 to drain.  Under congestion this produces
+  multiple concurrent step-sends of one flow slot on the same path, which
+  split bandwidth and cascade (Fig. 1e).  The simulator therefore tracks a
+  window of concurrent *flow instances* per slot.
+* Steps are numbered globally-monotonically across passes (the wire `step`
+  field of §3.2; resets would be handled by Alg. 1's lazy correction anyway).
+
+2-D ring collectives (§4.6) are expressed with two *phases* per pass: each
+node has a dim-0 flow slot (phase 0) and a dim-1 slot (phase 1); a job-wide
+barrier separates the phases.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .topology import Topology
+
+
+@dataclass(frozen=True)
+class Workload:
+    """Flow-slot arrays (length F) + per-job arrays (length J)."""
+
+    # --- flow slots ---
+    src: np.ndarray          # [F] host id
+    dst: np.ndarray          # [F] successor host id
+    pred: np.ndarray         # [F] flow-slot index of ring predecessor
+    job: np.ndarray          # [F] job id
+    phase: np.ndarray        # [F] phase within a pass (0 for plain 1-D rings)
+    steps_per_seg: np.ndarray  # [F] steps this slot runs per segment
+    pass_steps: np.ndarray   # [F] steps per collective = 2(N-1) (boundaries)
+    step_offset: np.ndarray  # [F] added to the wire step index (Fig. 9 style
+                             #     scenarios where flows start mid-collective)
+    flow_start: np.ndarray   # [F] per-flow start time (s), on top of job start
+    # --- jobs ---
+    n_phases: np.ndarray     # [J] phases per pass (1 or 2)
+    n_passes: np.ndarray     # [J]
+    chunk_sched: np.ndarray  # [J, max_segments] bytes per chunk in that segment
+    compute_gap: np.ndarray  # [J] seconds inserted before each pass
+    start_time: np.ndarray   # [J] job arrival time (s)
+
+    @property
+    def n_flows(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def n_jobs(self) -> int:
+        return int(self.n_phases.shape[0])
+
+    @property
+    def max_segments(self) -> int:
+        return int(self.chunk_sched.shape[1])
+
+    def total_steps(self) -> np.ndarray:
+        """[F] total steps each slot executes over the whole job."""
+        return self.steps_per_seg * self.n_passes[self.job]
+
+
+def _ring_slots(hosts: np.ndarray, ring_size: int, job_id: int, phase: int,
+                flow_base: int):
+    """Split `hosts` into interleaved rings of `ring_size` (stride layout:
+    ring g = hosts[g::n_groups], matching Fig. 1a's 0-4-8-12 example)."""
+    n = len(hosts)
+    assert n % ring_size == 0, (n, ring_size)
+    n_groups = n // ring_size
+    src, dst, pred, phs = [], [], [], []
+    idx = {}
+    for g in range(n_groups):
+        members = hosts[g::n_groups]
+        for j in range(ring_size):
+            idx[(g, j)] = flow_base + len(src)
+            src.append(members[j])
+            dst.append(members[(j + 1) % ring_size])
+            phs.append(phase)
+    for g in range(n_groups):
+        for j in range(ring_size):
+            pred.append(idx[(g, (j - 1) % ring_size)])
+    return src, dst, pred, phs
+
+
+class WorkloadBuilder:
+    def __init__(self, max_segments: int | None = None):
+        self._flows: dict[str, list] = {
+            k: [] for k in ("src", "dst", "pred", "job", "phase", "sps", "ps",
+                            "off", "fstart")}
+        self._jobs: dict[str, list] = {k: [] for k in
+                                       ("n_phases", "n_passes", "gap", "start", "chunks")}
+
+    def _pad_flow_defaults(self):
+        n = len(self._flows["src"])
+        for k in ("off", "fstart"):
+            self._flows[k] += [0.0 if k == "fstart" else 0] * \
+                (n - len(self._flows[k]))
+
+    def add_ring_job(
+        self,
+        hosts: np.ndarray | list[int],
+        ring_size: int,
+        chunk_bytes: float | list[float] = 8e6,
+        passes: int = 1,
+        compute_gap: float = 0.0,
+        start_time: float = 0.0,
+        dims: tuple[int, ...] | None = None,
+        barrier: bool = True,
+    ) -> int:
+        """Add one job. `dims=(d0, d1)` builds a 2-D ring collective instead of
+        interleaved 1-D rings of `ring_size`.  `chunk_bytes` may be a list of
+        per-pass chunk sizes (Table 2 layer-bucket schedules).
+
+        ``barrier=False`` chains the passes back-to-back with only the ring
+        data dependency between them (a pure communication benchmark, the
+        paper's §2.2/§4.2 motivating workload): step misalignment can then
+        accumulate *across* collective boundaries, which is how overlap
+        degrees beyond 2(N-1) arise.  Requires scalar chunk_bytes and 1-D
+        rings; compute_gap must be 0.
+        """
+        hosts = np.asarray(hosts, np.int32)
+        job_id = len(self._jobs["n_passes"])
+        base = len(self._flows["src"])
+        if not barrier:
+            assert dims is None and np.isscalar(chunk_bytes) and compute_gap == 0.0
+            s, d, p, ph = _ring_slots(hosts, ring_size, job_id, 0, base)
+            sps = [passes * 2 * (ring_size - 1)] * len(s)
+            self._flows["src"] += list(s)
+            self._flows["dst"] += list(d)
+            self._flows["pred"] += list(p)
+            self._flows["job"] += [job_id] * len(s)
+            self._flows["phase"] += list(ph)
+            self._flows["sps"] += sps
+            self._flows["ps"] += [2 * (ring_size - 1)] * len(s)
+            self._jobs["n_phases"].append(1)
+            self._jobs["n_passes"].append(1)
+            self._jobs["gap"].append(0.0)
+            self._jobs["start"].append(float(start_time))
+            self._jobs["chunks"].append([float(chunk_bytes)])
+            return job_id
+        if dims is None:
+            s, d, p, ph = _ring_slots(hosts, ring_size, job_id, 0, base)
+            sps = [2 * (ring_size - 1)] * len(s)
+            n_phases = 1
+        else:
+            d0, d1 = dims
+            assert d0 * d1 == len(hosts)
+            grid = hosts.reshape(d0, d1)
+            s, d, p, ph, sps = [], [], [], [], []
+            # phase 0: rings along dim0 (columns), phase 1: rings along dim1 (rows)
+            for c in range(d1):
+                col = grid[:, c]
+                s0, d0_, p0, _ = _ring_slots(col, d0, job_id, 0, base + len(s))
+                s += s0; d += d0_; p += p0; ph += [0] * len(s0)
+                sps += [2 * (d0 - 1)] * len(s0)
+            for r in range(d0):
+                row = grid[r, :]
+                s1, d1_, p1, _ = _ring_slots(row, d1, job_id, 1, base + len(s))
+                s += s1; d += d1_; p += p1; ph += [1] * len(s1)
+                sps += [2 * (d1 - 1)] * len(s1)
+            n_phases = 2
+        self._flows["src"] += list(s)
+        self._flows["dst"] += list(d)
+        self._flows["pred"] += list(p)
+        self._flows["job"] += [job_id] * len(s)
+        self._flows["phase"] += list(ph)
+        self._flows["sps"] += list(sps)
+        self._flows["ps"] += list(sps)   # one collective per segment
+        chunks = ([float(chunk_bytes)] * passes if np.isscalar(chunk_bytes)
+                  else [float(c) for c in chunk_bytes])
+        assert len(chunks) == passes, "per-pass chunk schedule must match passes"
+        # segment k belongs to pass k // n_phases
+        seg_chunks = [chunks[k // n_phases] for k in range(passes * n_phases)]
+        self._jobs["n_phases"].append(n_phases)
+        self._jobs["n_passes"].append(passes)
+        self._jobs["gap"].append(float(compute_gap))
+        self._jobs["start"].append(float(start_time))
+        self._jobs["chunks"].append(seg_chunks)
+        return job_id
+
+    def add_chain_job(self, pairs, steps: int, chunk_bytes: float,
+                      step_offsets=None, flow_starts=None,
+                      start_time: float = 0.0) -> int:
+        """Independent sender chains within ONE job (the Fig. 9 hardware
+        scenario): each (src, dst) pair sends `steps` sequential chunks with
+        no cross-flow gating; per-flow step_offsets place flows at different
+        collective steps so Symphony sees outpacing vs lagging flows."""
+        self._pad_flow_defaults()
+        job_id = len(self._jobs["n_passes"])
+        base = len(self._flows["src"])
+        n = len(pairs)
+        step_offsets = step_offsets or [0] * n
+        flow_starts = flow_starts or [0.0] * n
+        for i, (s, d) in enumerate(pairs):
+            self._flows["src"].append(int(s))
+            self._flows["dst"].append(int(d))
+            self._flows["pred"].append(base + i)   # self-gated chain
+            self._flows["job"].append(job_id)
+            self._flows["phase"].append(0)
+            self._flows["sps"].append(steps)
+            self._flows["ps"].append(steps)
+            self._flows["off"].append(int(step_offsets[i]))
+            self._flows["fstart"].append(float(flow_starts[i]))
+        self._jobs["n_phases"].append(1)
+        self._jobs["n_passes"].append(1)
+        self._jobs["gap"].append(0.0)
+        self._jobs["start"].append(float(start_time))
+        self._jobs["chunks"].append([float(chunk_bytes)])
+        return job_id
+
+    def build(self) -> Workload:
+        self._pad_flow_defaults()
+        max_seg = max(len(c) for c in self._jobs["chunks"])
+        J = len(self._jobs["n_passes"])
+        sched = np.zeros((J, max_seg), np.float64)
+        for j, c in enumerate(self._jobs["chunks"]):
+            sched[j, :len(c)] = c
+            if len(c) < max_seg:           # pad with last value (unused segs)
+                sched[j, len(c):] = c[-1]
+        return Workload(
+            src=np.asarray(self._flows["src"], np.int32),
+            dst=np.asarray(self._flows["dst"], np.int32),
+            pred=np.asarray(self._flows["pred"], np.int32),
+            job=np.asarray(self._flows["job"], np.int32),
+            phase=np.asarray(self._flows["phase"], np.int32),
+            steps_per_seg=np.asarray(self._flows["sps"], np.int32),
+            pass_steps=np.asarray(self._flows["ps"], np.int32),
+            step_offset=np.asarray(self._flows["off"], np.int32),
+            flow_start=np.asarray(self._flows["fstart"], np.float64),
+            n_phases=np.asarray(self._jobs["n_phases"], np.int32),
+            n_passes=np.asarray(self._jobs["n_passes"], np.int32),
+            chunk_sched=sched,
+            compute_gap=np.asarray(self._jobs["gap"], np.float64),
+            start_time=np.asarray(self._jobs["start"], np.float64),
+        )
+
+
+def routes_for(topo: Topology, wl: Workload, spine: np.ndarray) -> np.ndarray:
+    """[F, 4] link ids (null-link = topo.n_links for unused hops) given a
+    per-flow spine choice."""
+    F = wl.n_flows
+    null = topo.n_links
+    routes = np.full((F, 4), null, np.int64)
+    st, dt = topo.tor_of(wl.src), topo.tor_of(wl.dst)
+    routes[:, 0] = topo.acc_up(wl.src)
+    routes[:, 3] = topo.acc_down(wl.dst)
+    inter = st != dt
+    routes[inter, 1] = topo.uplink(st[inter], spine[inter])
+    routes[inter, 2] = topo.downlink(spine[inter], dt[inter])
+    return routes
+
+
+def ecmp_spines(topo: Topology, wl: Workload, seed: int) -> np.ndarray:
+    """Per-flow 5-tuple-hash spine selection (persistent across steps)."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, topo.n_spines, wl.n_flows).astype(np.int64)
+
+
+def balanced_spines(topo: Topology, wl: Workload) -> np.ndarray:
+    """Static balanced routing: round-robin spines per source ToR (the paper's
+    controlled 'static balanced' scenarios in Fig. 2)."""
+    st, dt = topo.tor_of(wl.src), topo.tor_of(wl.dst)
+    spine = np.zeros(wl.n_flows, np.int64)
+    counters: dict[int, int] = {}
+    for f in range(wl.n_flows):
+        if st[f] == dt[f]:
+            continue  # intra-ToR flows never touch the fabric
+        t = int(st[f])
+        c = counters.get(t, 0)
+        spine[f] = c % topo.n_spines
+        counters[t] = c + 1
+    return spine

@@ -1,0 +1,176 @@
+"""Symphony's per-job switch state machine (paper Alg. 1, Eq. 1-5).
+
+This module is the *exact*, packet-granular reproduction of the paper's
+contribution: the Per-Job State Block kept by a switch egress port, the
+selective-throttling marking decision, and the windowed adaptive
+aggressiveness update.  Everything is pure JAX (jit/vmap/scan-able) so the
+same code drives
+
+  * unit / property tests (tests/test_symphony.py),
+  * the Pallas "switch pipeline" kernel oracle (kernels/switch_pipeline/ref.py),
+  * the fluid network simulator (core/netsim/simulator.py), which reuses the
+    marking math through :func:`marking_probability`.
+
+Terminology follows the paper:
+  step      logical ring-collective stage s_0 .. s_n of a job
+  psn       packet sequence number within the flow (fluid model: bytes/MTU)
+  LAST bit  RDMA WRITE "LAST" flag == step-completion signal
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SymphonyParams",
+    "SymphonyState",
+    "init_state",
+    "process_packet",
+    "window_update",
+    "marking_probability",
+    "process_packet_batch",
+]
+
+
+class SymphonyParams(NamedTuple):
+    """Static control parameters (paper Table 1 + §3.3/§3.4 defaults)."""
+
+    k: jax.Array | float = 0.01          # throttling gain (Eq. 4)
+    tau: jax.Array | float = 0.25        # outpacing tolerance threshold (Eq. 3)
+    n_warmup: jax.Array | int = 16       # psn_rec warm-up guard (Alg. 1 l.11)
+    n_sample: jax.Array | int = 32       # Sample Guard for the window update
+    alpha_max: jax.Array | float = 64.0  # numerical cap on alpha(t)
+
+
+class SymphonyState(NamedTuple):
+    """Per-(egress port, job) state block.
+
+    All fields are scalars; vmap over leading axes for multi-port/multi-job.
+    """
+
+    step_min: jax.Array   # i32 — global synchronization anchor
+    psn_rec: jax.Array    # f32 — time-windowed max PSN within step_min
+    alpha: jax.Array      # f32 — adaptive aggressiveness factor, >= 1
+    cnt_total: jax.Array  # f32 — packets seen in current window
+    cnt_op: jax.Array     # f32 — outpacing packets in current window
+
+
+def init_state(dtype=jnp.float32) -> SymphonyState:
+    return SymphonyState(
+        step_min=jnp.zeros((), jnp.int32),
+        psn_rec=jnp.zeros((), dtype),
+        alpha=jnp.ones((), dtype),
+        cnt_total=jnp.zeros((), dtype),
+        cnt_op=jnp.zeros((), dtype),
+    )
+
+
+def marking_probability(
+    step: jax.Array,
+    psn: jax.Array,
+    step_min: jax.Array,
+    psn_rec: jax.Array,
+    alpha: jax.Array,
+    params: SymphonyParams,
+) -> jax.Array:
+    """Eq. 1 + Eq. 4 with the Alg. 1 guards; returns P(mark) in [0, 1].
+
+    Lagging/aligned packets (step <= step_min) and warm-up windows
+    (psn_rec <= N_warmup) are never marked by Symphony.
+    """
+    outpacing = step > step_min
+    warm = psn_rec > jnp.asarray(params.n_warmup, psn_rec.dtype)
+    delta = alpha * (psn.astype(psn_rec.dtype) / jnp.maximum(psn_rec, 1.0))
+    p = jnp.minimum(1.0, jnp.asarray(params.k, psn_rec.dtype) * delta)
+    return jnp.where(outpacing & warm, p, 0.0)
+
+
+class Packet(NamedTuple):
+    step: jax.Array      # i32
+    psn: jax.Array       # i32/f32
+    is_last: jax.Array   # bool — RDMA WRITE LAST bit
+
+
+def process_packet(
+    state: SymphonyState,
+    pkt: Packet,
+    params: SymphonyParams,
+    uniform: jax.Array,
+) -> tuple[SymphonyState, jax.Array]:
+    """One dequeued packet through Alg. 1. Returns (state', to_mark_ecn).
+
+    `uniform` is a U[0,1) sample implementing TossCoin; pass 1.0 to obtain the
+    deterministic no-mark decision or compare against the probability
+    directly via :func:`marking_probability`.
+    """
+    step = jnp.asarray(pkt.step, jnp.int32)
+    psn = jnp.asarray(pkt.psn, state.psn_rec.dtype)
+
+    # l.2 UpdateTrafficStats — uses the state *before* this packet's update.
+    is_op = step > state.step_min
+    cnt_total = state.cnt_total + 1.0
+    cnt_op = state.cnt_op + is_op.astype(state.cnt_op.dtype)
+
+    # l.3-10 progress tracking: optimistic advancement + lazy correction.
+    is_last = jnp.asarray(pkt.is_last, bool)
+    lt = step < state.step_min
+    eq = step == state.step_min
+    step_min = jnp.where(is_last, step + 1, jnp.where(lt, step, state.step_min))
+    psn_rec = jnp.where(
+        is_last,
+        0.0,
+        jnp.where(lt, psn, jnp.where(eq, jnp.maximum(state.psn_rec, psn), state.psn_rec)),
+    )
+
+    # l.11-17 marking decision — evaluated against the *pre-update* anchors,
+    # matching the sequential switch pipeline (the packet that advances the
+    # state is itself judged by the state it found on arrival).
+    p = marking_probability(step, psn, state.step_min, state.psn_rec, state.alpha, params)
+    to_mark = uniform < p
+
+    new = SymphonyState(step_min=step_min, psn_rec=psn_rec, alpha=state.alpha,
+                        cnt_total=cnt_total, cnt_op=cnt_op)
+    return new, to_mark
+
+
+def window_update(state: SymphonyState, params: SymphonyParams) -> SymphonyState:
+    """End-of-T_win update: Eq. 2/3 via the integer test of Eq. 5.
+
+    * Sample Guard: skipped entirely when cnt_total <= N_sample.
+    * alpha moves by +-1, clamped to [1, alpha_max].
+    * Window counters reset; psn_rec resets (time-windowed max, §3.4.2).
+    """
+    have_samples = state.cnt_total > jnp.asarray(params.n_sample, state.cnt_total.dtype)
+    exceed = state.cnt_op >= jnp.asarray(params.tau, state.cnt_op.dtype) * state.cnt_total
+    delta = jnp.where(exceed, 1.0, -1.0)
+    alpha = jnp.where(have_samples, state.alpha + delta, state.alpha)
+    alpha = jnp.clip(alpha, 1.0, jnp.asarray(params.alpha_max, alpha.dtype))
+    zero = jnp.zeros_like(state.cnt_total)
+    return SymphonyState(step_min=state.step_min, psn_rec=zero, alpha=alpha,
+                         cnt_total=zero, cnt_op=zero)
+
+
+def process_packet_batch(
+    state: SymphonyState,
+    steps: jax.Array,
+    psns: jax.Array,
+    is_lasts: jax.Array,
+    uniforms: jax.Array,
+    params: SymphonyParams,
+) -> tuple[SymphonyState, jax.Array]:
+    """Sequentially process a batch of packets (lax.scan over Alg. 1).
+
+    This is the oracle for the Pallas switch-pipeline kernel: the ASIC
+    processes packets one-by-one through the stateful ALUs; marks[i] is the
+    decision for packet i given all packets < i.
+    """
+
+    def body(st, x):
+        step, psn, last, u = x
+        st, mark = process_packet(st, Packet(step, psn, last), params, u)
+        return st, mark
+
+    state, marks = jax.lax.scan(body, state, (steps, psns, is_lasts, uniforms))
+    return state, marks

@@ -1,0 +1,30 @@
+"""Trace-time feature flags.
+
+ROOFLINE_MODE: XLA's HLO cost analysis counts while-loop bodies ONCE
+(not x trip-count), so any lax.scan/lax.map in the program under-reports
+FLOPs/bytes.  For the roofline lowering we therefore trace a semantically
+identical but loop-free program: unrolled layer stacks, no gradient
+accumulation, unchunked cross-entropy / attention / SSD / MoE dispatch.
+Memory analysis keeps using the production (scanned) lowering.
+"""
+ROOFLINE_MODE = False
+
+# §Perf hillclimb levers (trace-time):
+SSD_BF16 = False        # bf16 intra-chunk SSD intermediates (halves the
+                        # [Q,Q]/[Q,N] HBM traffic of the reference SSD)
+RING_SYNC_DTYPE = "float32"   # explicit-ring gradient reduction dtype
+
+
+def set_roofline(v: bool) -> None:
+    global ROOFLINE_MODE
+    ROOFLINE_MODE = bool(v)
+
+
+def set_ssd_bf16(v: bool) -> None:
+    global SSD_BF16
+    SSD_BF16 = bool(v)
+
+
+def set_ring_sync_dtype(d: str) -> None:
+    global RING_SYNC_DTYPE
+    RING_SYNC_DTYPE = d

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel (fp32 softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, window: int = 0, causal: bool = True):
+    """q: [BH, S, D]; k/v: [BHkv, S, D] (GQA: BH = BHkv * group).
+    Returns (o [BH,S,D], lse [BH,S])."""
+    BH, S, D = q.shape
+    group = BH // k.shape[0]
+    kr = jnp.repeat(k, group, axis=0)
+    vr = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / np.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok, s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1)
+    o = jnp.einsum("bqk,bkd->bqd", p / jnp.maximum(l[..., None], 1e-30),
+                   vr.astype(jnp.float32))
+    lse = (m[..., 0] + jnp.log(jnp.maximum(l, 1e-30)))
+    return o.astype(q.dtype), lse

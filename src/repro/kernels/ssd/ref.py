@@ -1,0 +1,2 @@
+"""Oracle for the SSD kernel: re-export the model-side chunked reference."""
+from ...models.ssm import segsum_exp, ssd_reference  # noqa: F401

@@ -1,0 +1,27 @@
+"""Oracle: exact Alg. 1 via core/symphony.py, with T_win flags."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.symphony import (Packet, SymphonyParams, SymphonyState,
+                              init_state, process_packet, window_update)
+
+
+def pipeline_ref(steps, psns, lasts, win_ends, uniforms,
+                 params: SymphonyParams):
+    """Sequential Alg. 1 + window updates. Returns (marks, step_min, psn_rec,
+    alpha) trajectories — the post-packet state, matching the kernel."""
+    def body(st, x):
+        step, psn, last, wend, u = x
+        st, mark = process_packet(st, Packet(step, psn, last > 0), params, u)
+        st = jax.lax.cond(wend > 0, lambda s: window_update(s, params),
+                          lambda s: s, st)
+        return st, (mark, st.step_min, st.psn_rec, st.alpha)
+
+    st = init_state()
+    _, (marks, smin, prec, alpha) = jax.lax.scan(
+        body, st, (steps.astype(jnp.int32), psns.astype(jnp.float32),
+                   lasts.astype(jnp.int32), win_ends.astype(jnp.int32),
+                   uniforms.astype(jnp.float32)))
+    return marks.astype(jnp.int32), smin, prec, alpha

@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model); 'pod' is outer
+data parallelism over the DCN tier — the Ethernet fabric whose ring-step
+misalignment Symphony manages (core/netsim simulates exactly this tier).
+
+These are FUNCTIONS so importing the module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist (tests / examples): 1D 'data' mesh."""
+    n = len(jax.devices())
+    return make_mesh((n,), ("data",))

@@ -1,0 +1,400 @@
+"""Train / prefill / decode step builders + ShapeDtypeStruct input specs for
+every assigned (architecture x shape) cell.
+
+`build_cell(arch, shape_name, mesh, ...)` returns a `Cell` whose `fn` +
+`args` are ready for ``jax.jit(fn).lower(*args)`` — the multi-pod dry-run and
+the roofline harness both consume this.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..config import ModelConfig, ParallelConfig, ShapeSpec, TrainConfig
+from ..configs import registry
+from ..models import build_model
+from ..models.params import abstract_tree
+from ..optim.adamw import OptState, adamw_update, init_opt_state
+from ..parallel.sharding import make_rules, spec_for
+
+# ---------------------------------------------------------------------------
+# per-arch parallel/training policy (iterated during §Perf)
+
+ARCH_POLICY: dict[str, dict[str, Any]] = {
+    "mamba2_130m":         dict(fsdp=False, remat="block",
+                                opt_dtype="float32", master=True, accum=1),
+    "minicpm3_4b":         dict(fsdp=False, remat="block",
+                                opt_dtype="float32", master=True, accum=2),
+    "h2o_danube_3_4b":     dict(fsdp=False, remat="block",
+                                opt_dtype="float32", master=True, accum=2),
+    "nemotron_4_15b":      dict(fsdp=True, remat="block",
+                                opt_dtype="float32", master=True, accum=4),
+    "nemotron_4_340b":     dict(fsdp=True, remat="block",
+                                opt_dtype="bfloat16", master=False, accum=16),
+    "granite_moe_1b_a400m": dict(fsdp=False, remat="block",
+                                 opt_dtype="float32", master=True, accum=2),
+    "kimi_k2_1t_a32b":     dict(fsdp=True, remat="block",
+                                opt_dtype="bfloat16", master=False, accum=16),
+    "whisper_large_v3":    dict(fsdp=True, remat="block",
+                                opt_dtype="float32", master=True, accum=8),
+    "jamba_v0_1_52b":      dict(fsdp=True, remat="full",
+                                opt_dtype="bfloat16", master=False, accum=8),
+    "qwen2_vl_2b":         dict(fsdp=False, remat="block",
+                                opt_dtype="float32", master=True, accum=1),
+}
+
+
+def make_parallel_config(arch: str, shape_name: str) -> ParallelConfig:
+    pol = ARCH_POLICY[registry.canonical(arch)]
+    return ParallelConfig(fsdp=pol["fsdp"], remat=pol["remat"],
+                          scan_layers=True, grad_sync="xla",
+                          seq_shard_decode=shape_name.startswith("long"))
+
+
+def make_train_config(arch: str, spec: ShapeSpec) -> TrainConfig:
+    pol = ARCH_POLICY[registry.canonical(arch)]
+    return TrainConfig(global_batch=spec.global_batch, seq_len=spec.seq_len,
+                       opt_state_dtype=pol["opt_dtype"],
+                       master_weights=pol["master"])
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    fn: Callable                  # jit-able step function
+    args: tuple                   # ShapeDtypeStructs (dry-run) or arrays
+    donate: tuple[int, ...]       # argnums to donate
+    model_params: int             # true (unpadded) parameter count
+    active_params: int            # active params per token (MoE-aware)
+    notes: str = ""
+
+
+def _sh(mesh, *parts):
+    return NamedSharding(mesh, P(*parts))
+
+
+def _batch_axes(mesh: Mesh, batch: int):
+    """Largest prefix of (pod, data) that divides batch."""
+    axes = []
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape and batch % (n * mesh.shape[a]) == 0:
+            axes.append(a)
+            n *= mesh.shape[a]
+    return tuple(axes) if axes else None
+
+
+def _kv_seq_axes(mesh: Mesh, shape_name: str, batch_axes):
+    """Decode KV caches shard their sequence axis over 'model' (+ idle data
+    axes for long-context): distributed flash-decode."""
+    axes = ["model"]
+    used = set(batch_axes or ())
+    if shape_name.startswith("long"):
+        for a in ("data", "pod"):
+            if a in mesh.shape and a not in used:
+                axes.insert(0, a)
+    return tuple(axes)
+
+
+def active_param_count(cfg: ModelConfig, total: int) -> int:
+    """Active params per token: subtract unrouted expert weights."""
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    per_expert = m.d_ff_expert * cfg.d_model * \
+        (3 if cfg.activation == "swiglu" else 2)
+    n_moe = sum(1 for i in range(cfg.num_layers) if cfg.is_moe_layer(i))
+    inactive = n_moe * (m.num_experts - m.experts_per_token) * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               abstract: bool = True, policy_overrides: dict | None = None,
+               depth_override: int | None = None) -> Cell:
+    import dataclasses
+    arch = registry.canonical(arch)
+    cfg = registry.get_config(arch)
+    if depth_override is not None:
+        repl = {"num_layers": depth_override}
+        if cfg.encoder_layers:
+            repl["encoder_layers"] = depth_override
+        cfg = dataclasses.replace(cfg, **repl)
+    spec = next(s for s in registry.get_shapes(arch) if s.name == shape_name)
+    par = make_parallel_config(arch, shape_name)
+    tcfg = make_train_config(arch, spec)
+    pol = dict(ARCH_POLICY[arch])
+    if policy_overrides:
+        pol.update(policy_overrides)
+        par = ParallelConfig(**{**par.__dict__, **{
+            k: v for k, v in policy_overrides.items()
+            if k in ParallelConfig.__dataclass_fields__}})
+    rules = make_rules(fsdp=par.fsdp, seq_shard_decode=par.seq_shard_decode)
+    model = build_model(cfg, par, mesh=mesh, rules=rules)
+
+    from ..models.params import count_params
+    n_params = count_params(build_model(cfg).param_spec())  # unpadded
+    n_active = active_param_count(cfg, n_params)
+
+    if spec.kind == "train":
+        return _train_cell(arch, cfg, spec, tcfg, par, model, mesh, rules,
+                           n_params, n_active, pol)
+    if spec.kind == "prefill":
+        return _prefill_cell(arch, cfg, spec, model, mesh, rules,
+                             n_params, n_active)
+    return _decode_cell(arch, cfg, spec, model, mesh, rules,
+                        n_params, n_active)
+
+
+# ------------------------------------------------------------ train
+
+
+def _model_inputs(cfg: ModelConfig, spec: ShapeSpec, mesh: Mesh,
+                  for_train: bool):
+    """ShapeDtypeStructs for the forward inputs of this family."""
+    B, S = spec.global_batch, spec.seq_len
+    ba = _batch_axes(mesh, B)
+    tok_sh = _sh(mesh, ba, None)
+    if cfg.family == "encdec":
+        # stub audio frontend: encoder frames are precomputed embeddings
+        dec_S = min(S, 4096) if for_train else min(S, 4096)
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, dec_S), jnp.int32,
+                                           sharding=tok_sh),
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16,
+                                           sharding=_sh(mesh, ba, None, None)),
+        }
+    if cfg.family == "vlm":
+        return {
+            "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16,
+                                           sharding=_sh(mesh, ba, None, None)),
+            "positions": jax.ShapeDtypeStruct((B, S, 3), jnp.int32,
+                                              sharding=_sh(mesh, ba, None, None)),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=tok_sh)}
+
+
+def _labels_spec(cfg: ModelConfig, spec: ShapeSpec, mesh: Mesh):
+    B, S = spec.global_batch, spec.seq_len
+    if cfg.family == "encdec":
+        S = min(S, 4096)
+    ba = _batch_axes(mesh, B)
+    return jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=_sh(mesh, ba, None))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  chunk: int = 1024) -> jax.Array:
+    """Sequence-chunked CE: bounds the fp32 softmax temporaries to
+    [B, chunk, V] instead of materializing an fp32 copy of the full logits."""
+    from .. import flags
+    B, S, V = logits.shape
+    if flags.ROOFLINE_MODE or S % chunk or S <= chunk:
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits, labels[..., None], axis=-1)[..., 0].astype(jnp.float32)
+        return (lse - gold).mean()
+
+    def body(acc, i):
+        lg = jax.lax.dynamic_slice_in_dim(logits, i * chunk, chunk, axis=1)
+        lb = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        lse = jax.nn.logsumexp(lg.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            lg, lb[..., None], axis=-1)[..., 0].astype(jnp.float32)
+        return acc + (lse - gold).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(S // chunk))
+    return total / (B * S)
+
+
+def _train_cell(arch, cfg, spec, tcfg, par, model, mesh, rules,
+                n_params, n_active, pol=None) -> Cell:
+    p_abs = model.abstract_params()
+    # ZeRO-1: optimizer states shard their 'embed'/'expert_mlp' axes over the
+    # data axes even when weights are replicated there (policy zero1=True —
+    # the §Perf alternative to FSDP that avoids per-microbatch parameter
+    # all-gathers), and always over 'pod' on the multi-pod mesh.
+    opt_rules = dict(rules)
+    zero_axes = ["pod"] if "pod" in mesh.shape else []
+    if (pol or {}).get("zero1"):
+        zero_axes.append("data")
+    for ax_name in zero_axes:
+        for ax in ("embed", "expert_mlp"):
+            cur = opt_rules.get(ax) or ()
+            if ax_name not in cur:
+                opt_rules[ax] = tuple(cur) + (ax_name,)
+
+    sdtype = jnp.dtype(tcfg.opt_state_dtype)
+    spec_tree = model.param_spec()
+    opt_abs_f32 = abstract_tree(spec_tree, opt_rules, mesh)
+
+    def recast(tree, dt):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, dt, sharding=x.sharding),
+            tree)
+
+    opt_abs = OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=recast(opt_abs_f32, sdtype),
+        v=recast(opt_abs_f32, sdtype),
+        master=recast(opt_abs_f32, jnp.float32) if tcfg.master_weights
+        else None)
+    inputs = _model_inputs(cfg, spec, mesh, for_train=True)
+    labels = _labels_spec(cfg, spec, mesh)
+
+    accum = (pol or ARCH_POLICY[arch]).get("accum", 1)
+    B = spec.global_batch
+    while accum > 1 and (B % accum or (B // accum) %
+                         max(mesh.shape.get("data", 1) *
+                             mesh.shape.get("pod", 1), 1)):
+        accum //= 2   # keep microbatches shardable over the data axes
+
+    def loss_fn(p, mb):
+        if cfg.family == "encdec":
+            logits, aux = model.apply(p, mb["tokens"], mb["frames"])
+        elif cfg.family == "vlm":
+            logits, aux = model.apply(p, positions=mb["positions"],
+                                      embeds=mb["embeds"])
+        else:
+            logits, aux = model.apply(p, mb["tokens"])
+        return cross_entropy(logits[..., :cfg.vocab_size],
+                             mb["labels"]) + aux
+
+    # accumulate in bf16 when the optimizer state is bf16 (>=300B models):
+    # an fp32 accumulator for 1T params costs 16 GiB/chip by itself.
+    acc_dtype = jnp.bfloat16 if tcfg.opt_state_dtype == "bfloat16" \
+        else jnp.float32
+
+    def train_step(params, opt, batch):
+        if accum > 1:
+            # gradient accumulation: microbatch the global batch to bound
+            # live activations (the big-model policy)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+
+            def micro(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grads = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), grads_acc, grads)
+                return (loss_acc + loss, grads), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zero), mbs)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt, metrics = adamw_update(params, grads, opt, tcfg)
+        metrics["loss"] = loss
+        return params, opt, metrics
+
+    batch = dict(inputs, labels=labels)
+    return Cell(arch=arch, shape=spec, fn=train_step,
+                args=(p_abs, opt_abs, batch), donate=(0, 1),
+                model_params=n_params, active_params=n_active)
+
+
+# ------------------------------------------------------------ prefill
+
+
+def _prefill_cell(arch, cfg, spec, model, mesh, rules, n_params, n_active
+                  ) -> Cell:
+    p_abs = model.abstract_params()
+    inputs = _model_inputs(cfg, spec, mesh, for_train=False)
+
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            logits, _ = model.apply(params, batch["tokens"], batch["frames"])
+        elif cfg.family == "vlm":
+            logits, _ = model.apply(params, positions=batch["positions"],
+                                    embeds=batch["embeds"])
+        else:
+            logits, _ = model.apply(params, batch["tokens"])
+        return logits[:, -1]
+
+    return Cell(arch=arch, shape=spec, fn=prefill_step, args=(p_abs, inputs),
+                donate=(), model_params=n_params, active_params=n_active)
+
+
+# ------------------------------------------------------------ decode
+
+
+def _abstract_cache(model, cfg, spec, mesh, shape_name, rules):
+    """ShapeDtypeStructs for the decode cache with per-shape shardings."""
+    B, S = spec.global_batch, spec.seq_len
+    ba = _batch_axes(mesh, B)
+    kv_axes = _kv_seq_axes(mesh, shape_name, ba)
+
+    if cfg.family == "encdec":
+        p_abs = model.abstract_params()
+        enc_abs = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                       jnp.bfloat16)
+        real = jax.eval_shape(lambda p, e: model.init_cache(p, e, S),
+                              p_abs, enc_abs)
+
+        def shard_ed(x):
+            if len(x.shape) == 5 and x.shape[3] == S:    # self kv [L,B,H,S,hd]
+                parts = (None, ba, None, kv_axes, None)
+            elif len(x.shape) == 5:                      # cross [L,B,Senc,H,hd]
+                parts = (None, ba, None, "model", None)
+            else:
+                parts = tuple([None] * len(x.shape))
+            return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                        sharding=_sh(mesh, *parts))
+        return jax.tree.map(shard_ed, real)
+
+    # LM families: take structure from init_cache, attach shardings.
+    real = jax.eval_shape(lambda: model.init_cache(B, S))
+
+    def with_sharding(x):
+        nd = len(x.shape)
+        if nd == 5 and jnp.issubdtype(x.dtype, jnp.floating) and \
+                x.dtype == jnp.bfloat16:
+            parts = (None, ba, None, kv_axes, None)      # gqa kv [G,B,Hkv,S,hd]
+        elif nd == 5:
+            parts = (None, ba, "model", None, None)      # ssm state [G,B,H,hd,N]
+        elif nd == 4 and cfg.ssm is not None and \
+                x.shape[2] == cfg.ssm.d_conv - 1:
+            parts = (None, ba, None, None)               # conv ring [G,B,K-1,C]
+        elif nd == 4:
+            parts = (None, ba, kv_axes, None)            # mla latent [G,B,S,r]
+        else:
+            parts = tuple([None] * nd)
+        return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                    sharding=_sh(mesh, *parts))
+
+    return jax.tree.map(with_sharding, real)
+
+
+def _decode_cell(arch, cfg, spec, model, mesh, rules, n_params, n_active
+                 ) -> Cell:
+    B, S = spec.global_batch, spec.seq_len
+    p_abs = model.abstract_params()
+    ba = _batch_axes(mesh, B)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=_sh(mesh, ba, None))
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=_sh(mesh, ba))
+    cache = _abstract_cache(model, cfg, spec, mesh, spec.name, rules)
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = model.decode_step(params, cache, tokens, pos)
+        return logits, new_cache
+
+    return Cell(arch=arch, shape=spec, fn=serve_step,
+                args=(p_abs, cache, tokens, pos), donate=(1,),
+                model_params=n_params, active_params=n_active)

@@ -1,0 +1,5 @@
+from .encdec import EncDec
+from .lm import LM
+from .model import build_model
+
+__all__ = ["build_model", "LM", "EncDec"]

@@ -1,0 +1,187 @@
+"""Attention: GQA (+ sliding window), full train/prefill path and cached
+decode path.  The train/prefill softmax attention dispatches to the Pallas
+flash kernel when enabled, else to the jnp reference.
+
+Shapes: activations are [batch, seq, d_model]; q/k/v are
+[batch, seq, heads, head_dim].  Decode KV caches are
+[batch, kv_heads, max_seq, head_dim] and may be sequence-sharded across mesh
+axes — the decode path computes partial softmax statistics per shard and
+combines with log-sum-exp (distributed flash-decode).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig
+from ..parallel.sharding import padded
+from .layers import apply_mrope, apply_rope
+from .params import ParamSpec
+
+NEG_INF = -1e30
+
+
+def attn_spec(cfg: ModelConfig, tp: int, layers: int | None = None) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh = padded(cfg.num_heads, tp)
+    # MHA: pad kv heads with q heads; GQA: kv heads stay (replicated under TP)
+    nkv = nh if cfg.num_kv_heads == cfg.num_heads else cfg.num_kv_heads
+    lead = (layers,) if layers is not None else ()
+    la = ("layers",) if layers is not None else ()
+    return {
+        "wq": ParamSpec(lead + (d, nh, hd), la + ("embed", "heads", "head_dim")),
+        "wk": ParamSpec(lead + (d, nkv, hd), la + ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec(lead + (d, nkv, hd), la + ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec(lead + (nh, hd, d), la + ("heads", "head_dim", "embed")),
+    }
+
+
+def effective_kv_heads(cfg: ModelConfig, tp: int) -> int:
+    """KV head count after TP padding (matches attn_spec)."""
+    nh = padded(cfg.num_heads, tp)
+    return nh if cfg.num_kv_heads == cfg.num_heads else cfg.num_kv_heads
+
+
+def _mask_bias(q_pos, k_pos, window: int) -> jax.Array:
+    """[.. , Sq, Sk] additive mask: causal (+ sliding window if window>0)."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window:
+        ok &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def ref_attention(q, k, v, q_pos, k_pos, window: int = 0,
+                  cross: bool = False) -> jax.Array:
+    """Reference softmax attention with GQA head-group mapping.
+
+    q: [B, Sq, Hq, D]; k/v: [B, Sk, Hkv, D].  fp32 softmax.
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(D)
+    if not cross:
+        logits = logits + _mask_bias(q_pos, k_pos, window)[:, None, None]
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def ref_attention_chunked(q, k, v, q_pos, k_pos, window: int = 0,
+                          cross: bool = False, chunk: int = 512) -> jax.Array:
+    """Streaming (flash-style) reference: scan over q blocks so the logits
+    transient is [B, Hq, chunk, Sk] instead of [B, Hq, Sq, Sk].  Same FLOPs,
+    bounded memory — this is what the dry-run HLO lowers for long sequences
+    (the Pallas kernel is the TPU-native equivalent)."""
+    B, Sq, Hq, D = q.shape
+    assert Sq % chunk == 0, (Sq, chunk)
+
+    def blk(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * chunk, chunk, axis=-1) \
+            if q_pos is not None else None
+        return ref_attention(qs, k, v, qp, k_pos, window=window, cross=cross)
+
+    out = jax.lax.map(blk, jnp.arange(Sq // chunk))     # [nc, B, chunk, H, D]
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, D)
+
+
+def flash_or_ref(q, k, v, q_pos, k_pos, window: int = 0, cross: bool = False,
+                 use_flash: bool = False) -> jax.Array:
+    from .. import flags
+    if use_flash and not cross:
+        from ..kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, q_pos, k_pos, window=window)
+    if q.shape[1] > 2048 and not flags.ROOFLINE_MODE:
+        return ref_attention_chunked(q, k, v, q_pos, k_pos, window=window,
+                                     cross=cross)
+    return ref_attention(q, k, v, q_pos, k_pos, window=window, cross=cross)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # [B, Hkv, S, D]
+    v: jax.Array        # [B, Hkv, S, D]
+
+
+def project_qkv(p: dict, x: jax.Array, cfg: ModelConfig, positions,
+                rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if rope and cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif rope and cfg.pos_emb == "mrope":
+        if positions.shape[-1] != 3:       # text-only: t = h = w
+            positions = jnp.broadcast_to(positions[..., None],
+                                         positions.shape + (3,))
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def attention_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                    positions: jax.Array, use_flash: bool = False) -> jax.Array:
+    """Full (train / prefill) self-attention."""
+    q, k, v = project_qkv(p, x, cfg, positions)
+    pos1d = positions[..., 0] if cfg.pos_emb == "mrope" else positions
+    o = flash_or_ref(q, k, v, pos1d, pos1d, window=cfg.sliding_window,
+                     use_flash=use_flash)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
+                     cache: KVCache, pos: jax.Array) -> tuple[jax.Array, KVCache]:
+    """One-token decode against a KV cache.
+
+    x: [B, 1, d]; pos: [B] current position.  The cache may be sharded along
+    its sequence axis; the partial-softmax combine below is shard-local math
+    followed by lane-invariant reductions, so GSPMD lowers it to an
+    all-reduce of (num, den) pairs instead of gathering the cache.
+    """
+    B = x.shape[0]
+    q, k_new, v_new = project_qkv(p, x, cfg, pos[:, None])
+    # ring-buffer write for sliding windows; plain write otherwise
+    wpos = (pos % cfg.sliding_window) if cfg.sliding_window else pos
+    bidx = jnp.arange(B)
+    # cache layout [B, Hkv, S, D]; k_new[:, 0] is [B, Hkv, D]
+    k_cache = cache.k.at[bidx, :, wpos].set(k_new[:, 0])
+    v_cache = cache.v.at[bidx, :, wpos].set(v_new[:, 0])
+    o = cached_attention(q, KVCache(k_cache, v_cache), pos,
+                         window=cfg.sliding_window)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, KVCache(k_cache, v_cache)
+
+
+def cached_attention(q: jax.Array, cache: KVCache, pos: jax.Array,
+                     window: int = 0) -> jax.Array:
+    """q: [B, 1, Hq, D]; cache k/v: [B, Hkv, S, D]; pos: [B].
+
+    Computes softmax(q k^T) v with masking of unwritten / out-of-window slots,
+    in the numerically safe two-pass (max, exp-sum) form.
+    """
+    B, _, Hq, D = q.shape
+    Hkv, S = cache.k.shape[1], cache.k.shape[2]
+    g = Hq // Hkv
+    qg = q[:, 0].reshape(B, Hkv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg,
+                        cache.k.astype(jnp.float32)) / np.sqrt(D)
+    slot = jnp.arange(S)
+    if window:
+        # ring buffer of length `window`: once pos >= window every slot holds
+        # an in-window position; before that only slots <= pos are written.
+        valid = (slot[None] <= pos[:, None]) | (pos[:, None] >= window)
+    else:
+        valid = slot[None] <= pos[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = logits.max(-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    num = jnp.einsum("bhgs,bhsd->bhgd", e, cache.v.astype(jnp.float32))
+    den = e.sum(-1, keepdims=True)
+    out = num / jnp.maximum(den, 1e-30)
+    return out.reshape(B, 1, Hq, D).astype(cache.v.dtype)

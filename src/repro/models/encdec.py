@@ -1,0 +1,228 @@
+"""Encoder-decoder backbone (whisper-large-v3).
+
+The conv/mel frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings [B, S_enc, d_model].  Encoder layers are
+bidirectional self-attention + GELU MLP with layernorm (pre-LN); decoder
+layers add causal self-attention (cached at decode) and cross-attention to
+the encoder output (K/V precomputed once per request).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig, ParallelConfig
+from ..parallel.sharding import constrain, padded
+from . import params as prm
+from .attention import (KVCache, attn_spec, decode_attention, flash_or_ref,
+                        project_qkv)
+from .layers import (apply_embed, apply_mlp, apply_norm, apply_unembed,
+                     embed_spec, learned_pos_spec, mlp_spec, norm_spec)
+
+
+class EncDec:
+    def __init__(self, cfg: ModelConfig, par: ParallelConfig | None = None,
+                 mesh=None, rules=None, use_flash: bool = False):
+        self.cfg = cfg
+        self.par = par or ParallelConfig()
+        self.mesh = mesh
+        self.rules = rules
+        self.use_flash = use_flash
+        self.tp = 1 if mesh is None else mesh.shape.get("model", 1)
+        self.vocab_padded = padded(cfg.vocab_size, self.tp * 128)
+
+    # ------------------------------------------------------------ specs
+    def param_spec(self) -> dict:
+        cfg = self.cfg
+        E, Dd = cfg.encoder_layers, cfg.num_layers
+        enc = {
+            "ln1": norm_spec(cfg, E),
+            "attn": attn_spec(cfg, self.tp, E),
+            "ln2": norm_spec(cfg, E),
+            "mlp": mlp_spec(cfg, cfg.d_ff, E),
+        }
+        dec = {
+            "ln1": norm_spec(cfg, Dd),
+            "self_attn": attn_spec(cfg, self.tp, Dd),
+            "ln_x": norm_spec(cfg, Dd),
+            "cross_attn": attn_spec(cfg, self.tp, Dd),
+            "ln2": norm_spec(cfg, Dd),
+            "mlp": mlp_spec(cfg, cfg.d_ff, Dd),
+        }
+        return {
+            "embed": embed_spec(cfg, self.vocab_padded),
+            "dec_pos": learned_pos_spec(cfg, cfg.max_position),
+            "enc_pos": learned_pos_spec(cfg, cfg.encoder_seq),
+            "encoder": enc,
+            "decoder": dec,
+            "enc_norm": norm_spec(cfg),
+            "final_norm": norm_spec(cfg),
+        }
+
+    def init(self, key: jax.Array) -> dict:
+        return prm.init_tree(key, self.param_spec())
+
+    def abstract_params(self) -> dict:
+        return prm.abstract_tree(self.param_spec(), self.rules, self.mesh)
+
+    def param_shardings(self) -> dict:
+        return prm.shardings_tree(self.param_spec(), self.rules, self.mesh)
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params: dict, frames: jax.Array) -> jax.Array:
+        """frames: [B, S_enc, d] stub embeddings -> encoder states."""
+        cfg = self.cfg
+        B, S, _ = frames.shape
+        pe = params["enc_pos"]["pos_embedding"]
+        npos = pe.shape[0]
+        pos_emb = pe[jnp.arange(S) % npos]
+        x = frames.astype(jnp.dtype(cfg.dtype)) + pos_emb.astype(
+            jnp.dtype(cfg.dtype))
+        x = constrain(x, ("batch", "seq", "act_embed"), self.rules, self.mesh)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        sp = ("seq_sp" if S % max(self.tp, 1) == 0 else "seq")
+
+        def body(x, lp):
+            h = apply_norm(lp["ln1"], x, cfg)
+            q, k, v = project_qkv(lp["attn"], h, cfg, positions, rope=False)
+            o = flash_or_ref(q, k, v, positions, positions, cross=True,
+                             use_flash=False)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+            h = apply_norm(lp["ln2"], x, cfg)
+            x = x + apply_mlp(lp["mlp"], h, cfg)
+            x = constrain(x, ("batch", sp, "act_embed"), self.rules,
+                          self.mesh)
+            return x, None
+
+        if self.par.remat != "none":
+            body = jax.checkpoint(body)
+        if self.par.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["encoder"])
+        else:
+            E = cfg.encoder_layers
+            for i in range(E):
+                x, _ = body(x, jax.tree.map(lambda a: a[i], params["encoder"]))
+        return apply_norm(params["enc_norm"], x, cfg)
+
+    # ------------------------------------------------------------ decoder
+    def _dec_positions(self, B: int, S: int, offset=0):
+        return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32) + offset, (B, S))
+
+    def decode_train(self, params: dict, tokens: jax.Array,
+                     enc_out: jax.Array) -> jax.Array:
+        """Teacher-forced decoder pass. Returns logits [B, S, V]."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        pe = params["dec_pos"]["pos_embedding"]
+        x = apply_embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+        x = x + pe[jnp.arange(S) % pe.shape[0]].astype(x.dtype)
+        positions = self._dec_positions(B, S)
+        enc_pos = self._dec_positions(B, enc_out.shape[1])
+
+        sp = ("seq_sp" if S % max(self.tp, 1) == 0 else "seq")
+
+        def body(x, lp):
+            h = apply_norm(lp["ln1"], x, cfg)
+            q, k, v = project_qkv(lp["self_attn"], h, cfg, positions,
+                                  rope=False)
+            o = flash_or_ref(q, k, v, positions, positions,
+                             use_flash=self.use_flash)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, lp["self_attn"]["wo"])
+            h = apply_norm(lp["ln_x"], x, cfg)
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"])
+            ek = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"])
+            ev = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"])
+            o = flash_or_ref(q, ek, ev, positions, enc_pos, cross=True)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, lp["cross_attn"]["wo"])
+            h = apply_norm(lp["ln2"], x, cfg)
+            x = x + apply_mlp(lp["mlp"], h, cfg)
+            x = constrain(x, ("batch", sp, "act_embed"), self.rules,
+                          self.mesh)
+            return x, None
+
+        if self.par.remat != "none":
+            body = jax.checkpoint(body)
+        if self.par.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["decoder"])
+        else:
+            for i in range(cfg.num_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[i], params["decoder"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        return apply_unembed(params["embed"], x, cfg)
+
+    def apply(self, params: dict, tokens: jax.Array, frames: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+        enc = self.encode(params, frames)
+        logits = self.decode_train(params, tokens, enc)
+        return logits, jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------ serving
+    class Cache(NamedTuple):
+        self_kv: KVCache           # [L, B, Hkv, S, hd]
+        cross_k: jax.Array         # [L, B, S_enc, Hkv, hd]
+        cross_v: jax.Array
+
+    def init_cache(self, params: dict, enc_out: jax.Array, max_seq: int
+                   ) -> "EncDec.Cache":
+        cfg = self.cfg
+        B = enc_out.shape[0]
+        hd = cfg.resolved_head_dim
+
+        def per_layer(lp):
+            ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"])
+            cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"])
+            return ck, cv
+
+        ck, cv = jax.vmap(per_layer)(params["decoder"]) if self.par.scan_layers \
+            else jax.tree.map(lambda *x: jnp.stack(x), *[
+                per_layer(jax.tree.map(lambda a: a[i], params["decoder"]))
+                for i in range(cfg.num_layers)])
+        from .attention import effective_kv_heads
+        nkv = effective_kv_heads(cfg, self.tp)
+        kv = KVCache(
+            k=jnp.zeros((cfg.num_layers, B, nkv, max_seq, hd), jnp.bfloat16),
+            v=jnp.zeros((cfg.num_layers, B, nkv, max_seq, hd), jnp.bfloat16))
+        return EncDec.Cache(self_kv=kv, cross_k=ck, cross_v=cv)
+
+    def decode_step(self, params: dict, cache: "EncDec.Cache",
+                    tokens: jax.Array, pos: jax.Array
+                    ) -> tuple[jax.Array, "EncDec.Cache"]:
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pe = params["dec_pos"]["pos_embedding"]
+        x = apply_embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+        x = x + pe[pos % pe.shape[0]][:, None].astype(x.dtype)
+
+        def body(x, inp):
+            lp, kv, ck, cv = inp
+            h = apply_norm(lp["ln1"], x, cfg)
+            h, kv = decode_attention(lp["self_attn"], h, cfg, kv, pos)
+            x = x + h
+            h = apply_norm(lp["ln_x"], x, cfg)
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"])
+            o = flash_or_ref(q, ck, cv, None, None, cross=True)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, lp["cross_attn"]["wo"])
+            h = apply_norm(lp["ln2"], x, cfg)
+            x = x + apply_mlp(lp["mlp"], h, cfg)
+            return x, kv
+
+        if self.par.scan_layers:
+            x, new_kv = jax.lax.scan(
+                body, x, (params["decoder"], cache.self_kv, cache.cross_k,
+                          cache.cross_v))
+        else:
+            kvs = []
+            for i in range(cfg.num_layers):
+                sl = jax.tree.map(lambda a: a[i],
+                                  (params["decoder"], cache.self_kv,
+                                   cache.cross_k, cache.cross_v))
+                x, kv = body(x, sl)
+                kvs.append(kv)
+            new_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = apply_unembed(params["embed"], x, cfg)
+        return logits, EncDec.Cache(self_kv=new_kv, cross_k=cache.cross_k,
+                                    cross_v=cache.cross_v)

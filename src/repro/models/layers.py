@@ -1,0 +1,141 @@
+"""Shared building blocks: norms, MLPs, embeddings, RoPE / M-RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig
+from .params import ParamSpec
+
+# ---------------------------------------------------------------- norms
+
+
+def norm_spec(cfg: ModelConfig, layers: int | None = None) -> dict:
+    shape = (cfg.d_model,)
+    axes: tuple = ("norm",)
+    if layers is not None:
+        shape = (layers,) + shape
+        axes = ("layers",) + axes
+    d = {"scale": ParamSpec(shape, axes, init="ones", dtype=jnp.float32)}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamSpec(shape, axes, init="zeros", dtype=jnp.float32)
+    return d
+
+
+def apply_norm(p: dict, x: jax.Array, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: int, layers: int | None = None) -> dict:
+    d = cfg.d_model
+    lead = (layers,) if layers is not None else ()
+    la = ("layers",) if layers is not None else ()
+    if cfg.activation == "swiglu":
+        return {
+            "wi": ParamSpec(lead + (d, 2, d_ff), la + ("embed", None, "mlp")),
+            "wo": ParamSpec(lead + (d_ff, d), la + ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamSpec(lead + (d, d_ff), la + ("embed", "mlp")),
+        "wo": ParamSpec(lead + (d_ff, d), la + ("mlp", "embed")),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.activation == "swiglu":
+        gu = jnp.einsum("...d,dtf->...tf", x, p["wi"])
+        g, u = gu[..., 0, :], gu[..., 1, :]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        if cfg.activation == "relu2":        # squared ReLU (nemotron-4)
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def embed_spec(cfg: ModelConfig, padded_vocab: int) -> dict:
+    d = {"embedding": ParamSpec((padded_vocab, cfg.d_model),
+                                ("vocab", "embed"), init="normal", scale=1.0)}
+    if not cfg.tie_embeddings:
+        d["unembed"] = ParamSpec((cfg.d_model, padded_vocab),
+                                 ("embed", "vocab"), init="fan_in")
+    return d
+
+
+def apply_embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def apply_unembed(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["embedding"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["unembed"])
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # [..., S, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]   # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, ...]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): positions [..., seq, 3] = (t, h, w) ids;
+    frequency bands are partitioned across the three position streams."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)       # [half]
+    sec_id = jnp.asarray(
+        np.repeat(np.arange(len(sections)), sections), jnp.int32)  # [half]
+    # gather per-band positions: band_pos[..., s, i] = positions[..., s, sec_id[i]]
+    p = positions.astype(jnp.float32)                              # [..., S, 3]
+    band_pos = jnp.take(p, sec_id, axis=-1)                       # [..., S, half]
+    ang = band_pos * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def learned_pos_spec(cfg: ModelConfig, max_pos: int) -> dict:
+    return {"pos_embedding": ParamSpec((max_pos, cfg.d_model),
+                                       (None, "embed"), init="normal",
+                                       scale=0.02)}

@@ -1,0 +1,264 @@
+"""Decoder-only LM assembly (dense / MoE / SSM / hybrid / VLM backbones).
+
+Layers are stacked with `lax.scan` over *periods*: a period is the repeating
+pattern of sub-layers (length 1 for homogeneous stacks; 8 for jamba's
+1-attention-per-8 interleave with MoE on odd layers).  All parameters of one
+period position carry a leading [n_groups] axis, so the HLO stays compact at
+96 layers and remat policies apply per period.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig, ParallelConfig
+from ..parallel.sharding import constrain, padded
+from . import params as prm
+from .attention import KVCache, attn_spec, attention_block, decode_attention
+from .layers import (apply_embed, apply_mlp, apply_norm, apply_unembed,
+                     embed_spec, mlp_spec, norm_spec)
+from .mla import MLACache, mla_block, mla_decode, mla_spec
+from .moe import moe_block, moe_spec
+from .ssm import SSMCache, init_ssm_cache, ssm_block, ssm_decode, ssm_spec
+
+
+class LM:
+    """Functional model: param specs + apply functions, no state."""
+
+    def __init__(self, cfg: ModelConfig, par: ParallelConfig | None = None,
+                 mesh=None, rules=None, use_flash: bool = False,
+                 use_ssd_kernel: bool = False):
+        self.cfg = cfg
+        self.par = par or ParallelConfig()
+        self.mesh = mesh
+        self.rules = rules
+        self.use_flash = use_flash
+        self.use_ssd_kernel = use_ssd_kernel
+        self.tp = 1 if mesh is None else mesh.shape.get("model", 1)
+        self.vocab_padded = padded(cfg.vocab_size, self.tp * 128)
+        # period structure
+        self.period = 1
+        if cfg.attn_every:
+            self.period = cfg.attn_every
+        if cfg.moe is not None and cfg.moe_every > 1:
+            self.period = int(np.lcm(self.period, cfg.moe_every))
+        assert cfg.num_layers % self.period == 0, (cfg.num_layers, self.period)
+        self.n_groups = cfg.num_layers // self.period
+
+    # ------------------------------------------------------------ specs
+    def _block_spec(self, pos_in_period: int) -> dict:
+        cfg = self.cfg
+        kind = cfg.layer_kind(pos_in_period)
+        d: dict = {"ln1": norm_spec(cfg, self.n_groups)}
+        if kind == "attn":
+            if cfg.attention == "mla":
+                d["attn"] = mla_spec(cfg, self.tp, self.n_groups)
+            else:
+                d["attn"] = attn_spec(cfg, self.tp, self.n_groups)
+        else:
+            d["ssm"] = ssm_spec(cfg, self.tp, self.n_groups)
+        if cfg.d_ff or cfg.is_moe_layer(pos_in_period):
+            d["ln2"] = norm_spec(cfg, self.n_groups)
+            if cfg.is_moe_layer(pos_in_period):
+                d["moe"] = moe_spec(cfg, self.n_groups)
+            else:
+                d["mlp"] = mlp_spec(cfg, cfg.d_ff, self.n_groups)
+        return d
+
+    def param_spec(self) -> dict:
+        cfg = self.cfg
+        tree: dict = {"embed": embed_spec(cfg, self.vocab_padded),
+                      "final_norm": norm_spec(cfg)}
+        for i in range(self.period):
+            tree[f"block_{i}"] = self._block_spec(i)
+        return tree
+
+    def init(self, key: jax.Array) -> dict:
+        return prm.init_tree(key, self.param_spec())
+
+    def abstract_params(self) -> dict:
+        return prm.abstract_tree(self.param_spec(), self.rules, self.mesh)
+
+    def param_shardings(self) -> dict:
+        return prm.shardings_tree(self.param_spec(), self.rules, self.mesh)
+
+    # ------------------------------------------------------------ forward
+    def _apply_block(self, bp: dict, i: int, x: jax.Array,
+                     positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        kind = cfg.layer_kind(i)
+        aux = jnp.zeros((), jnp.float32)
+        h = apply_norm(bp["ln1"], x, cfg)
+        if kind == "attn":
+            if cfg.attention == "mla":
+                h = mla_block(bp["attn"], h, cfg, positions, self.use_flash)
+            else:
+                h = attention_block(bp["attn"], h, cfg, positions,
+                                    self.use_flash)
+        else:
+            h = ssm_block(bp["ssm"], h, cfg, self.use_ssd_kernel)
+        x = x + h
+        if "mlp" in bp or "moe" in bp:
+            h = apply_norm(bp["ln2"], x, cfg)
+            if "moe" in bp:
+                h, aux = moe_block(bp["moe"], h, cfg, self.rules, self.mesh)
+            else:
+                h = apply_mlp(bp["mlp"], h, cfg)
+            x = x + h
+        x = constrain(x, ("batch", "seq", "act_embed"), self.rules, self.mesh)
+        return x, aux
+
+    def _stack(self, params: dict, x: jax.Array, positions: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+        remat = self.par.remat != "none"
+        # residuals saved at remat boundaries are sequence-sharded over the
+        # TP axis (Megatron-SP): 16x smaller checkpoints; XLA re-gathers
+        # inside the group.
+        sp_ok = x.shape[1] % (self.tp or 1) == 0 and x.shape[1] > 1
+
+        # remat="full": checkpoint every sub-layer, so the group backward
+        # recomputes one layer at a time (hybrid groups hold several MoE
+        # layers whose recompute buffers must not coexist).
+        block = self._apply_block
+        if self.par.remat == "full" and self.period > 1:
+            block = jax.checkpoint(block, static_argnums=(1,))
+
+        def group_fn(x, gparams):
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(self.period):
+                bp = gparams[f"block_{i}"]
+                x, a = block(bp, i, x, positions)
+                aux = aux + a
+            if sp_ok:
+                x = constrain(x, ("batch", "seq_sp", "act_embed"),
+                              self.rules, self.mesh)
+            return x, aux
+
+        if remat:
+            group_fn = jax.checkpoint(group_fn,
+                                      prevent_cse=not self.par.scan_layers)
+
+        gtrees = {f"block_{i}": params[f"block_{i}"] for i in range(self.period)}
+        if self.par.scan_layers and self.n_groups > 1:
+            def scan_body(x, gp):
+                x, aux = group_fn(x, gp)
+                return x, aux
+            x, auxs = jax.lax.scan(scan_body, x, gtrees)
+            return x, auxs.sum()
+        aux = jnp.zeros((), jnp.float32)
+        for g in range(self.n_groups):
+            gp = jax.tree.map(lambda a: a[g], gtrees)
+            x, a = group_fn(x, gp)
+            aux = aux + a
+        return x, aux
+
+    def apply(self, params: dict, tokens: jax.Array | None = None,
+              positions: jax.Array | None = None,
+              embeds: jax.Array | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+        """Train/prefill forward.
+
+        tokens: [B, S] int32 (or `embeds` [B, S, d] from a modality stub).
+        positions: [B, S] (or [B, S, 3] for m-rope).  Returns (logits, aux).
+        """
+        cfg = self.cfg
+        if embeds is None:
+            x = apply_embed(params["embed"], tokens).astype(
+                jnp.dtype(cfg.dtype))
+        else:
+            x = embeds.astype(jnp.dtype(cfg.dtype))
+        B, S = x.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = constrain(x, ("batch", "seq", "act_embed"), self.rules, self.mesh)
+        x, aux = self._stack(params, x, positions)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = apply_unembed(params["embed"], x, cfg)
+        logits = constrain(logits, ("batch", "seq", "act_heads"),
+                           self.rules, self.mesh)
+        return logits, aux
+
+    # ------------------------------------------------------------ decode
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        """Per-period-position cache stacks with leading [n_groups] axis."""
+        cfg = self.cfg
+        caches: dict = {}
+        hd = cfg.resolved_head_dim
+        G = self.n_groups
+        for i in range(self.period):
+            kind = cfg.layer_kind(i)
+            if kind == "attn":
+                if cfg.attention == "mla":
+                    m = cfg.mla
+                    caches[f"block_{i}"] = MLACache(
+                        c=jnp.zeros((G, batch, max_seq, m.kv_lora_rank),
+                                    jnp.bfloat16),
+                        k_rope=jnp.zeros((G, batch, max_seq, m.qk_rope_head_dim),
+                                         jnp.bfloat16))
+                else:
+                    from .attention import effective_kv_heads
+                    nkv = effective_kv_heads(cfg, self.tp)
+                    s = min(max_seq, cfg.sliding_window) if cfg.sliding_window \
+                        else max_seq
+                    caches[f"block_{i}"] = KVCache(
+                        k=jnp.zeros((G, batch, nkv, s, hd), jnp.bfloat16),
+                        v=jnp.zeros((G, batch, nkv, s, hd), jnp.bfloat16))
+            else:
+                c = init_ssm_cache(cfg, batch, self.tp)
+                caches[f"block_{i}"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (G,) + a.shape), c,
+                    is_leaf=lambda a: isinstance(a, jax.Array))
+        return caches
+
+    def decode_step(self, params: dict, cache: dict, tokens: jax.Array,
+                    pos: jax.Array) -> tuple[jax.Array, dict]:
+        """tokens: [B, 1]; pos: [B] absolute positions. Returns (logits, cache)."""
+        cfg = self.cfg
+        x = apply_embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+        x = constrain(x, ("batch", None, "act_embed"), self.rules, self.mesh)
+
+        def step_group(x, inp):
+            gparams, gcache = inp
+            new_caches = {}
+            for i in range(self.period):
+                bp = gparams[f"block_{i}"]
+                c = gcache[f"block_{i}"]
+                kind = cfg.layer_kind(i)
+                h = apply_norm(bp["ln1"], x, cfg)
+                if kind == "attn":
+                    if cfg.attention == "mla":
+                        h, c = mla_decode(bp["attn"], h, cfg, c, pos)
+                    else:
+                        h, c = decode_attention(bp["attn"], h, cfg, c, pos)
+                else:
+                    h, c = ssm_decode(bp["ssm"], h, cfg, c)
+                x = x + h
+                if "mlp" in bp or "moe" in bp:
+                    h = apply_norm(bp["ln2"], x, cfg)
+                    if "moe" in bp:
+                        h, _ = moe_block(bp["moe"], h, cfg, self.rules,
+                                         self.mesh)
+                    else:
+                        h = apply_mlp(bp["mlp"], h, cfg)
+                    x = x + h
+                new_caches[f"block_{i}"] = c
+            return x, new_caches
+
+        gparams = {f"block_{i}": params[f"block_{i}"] for i in range(self.period)}
+        if self.par.scan_layers and self.n_groups > 1:
+            x, new_cache = jax.lax.scan(step_group, x, (gparams, cache))
+        else:
+            new_stack: list = []
+            for g in range(self.n_groups):
+                gp = jax.tree.map(lambda a: a[g], gparams)
+                gc = jax.tree.map(lambda a: a[g], cache)
+                x, nc = step_group(x, (gp, gc))
+                new_stack.append(nc)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_stack)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = apply_unembed(params["embed"], x, cfg)
+        return logits, new_cache

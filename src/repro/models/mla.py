@@ -1,0 +1,124 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+Train/prefill materialize per-head K/V from the compressed latent; decode
+keeps only the latent cache [B, S, kv_lora_rank] + shared rope key
+[B, S, rope_dim] and uses the *absorbed* formulation:
+
+    score(s) = (Wuk_h^T q_nope_h) . c_s + q_rope_h . k_rope_s
+    out_h    = Wuv_h ( sum_s softmax(score)_s c_s )
+
+so the per-token decode cost is O(S * (rank + rope_dim)) per head instead of
+materializing O(S * head_dim) K/V — the reason MLA long-context serving is
+cheap, and exactly the kind of compute/memory trade the roofline analysis
+tracks.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig
+from ..parallel.sharding import padded
+from .attention import NEG_INF, flash_or_ref
+from .layers import apply_rope
+from .params import ParamSpec
+
+
+def mla_spec(cfg: ModelConfig, tp: int, layers: int | None = None) -> dict:
+    m = cfg.mla
+    d = cfg.d_model
+    nh = padded(cfg.num_heads, tp)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    lead = (layers,) if layers is not None else ()
+    la = ("layers",) if layers is not None else ()
+    return {
+        "wq_a": ParamSpec(lead + (d, m.q_lora_rank), la + ("embed", "q_lora")),
+        "q_norm": ParamSpec(lead + (m.q_lora_rank,), la + ("norm",),
+                            init="ones", dtype=jnp.float32),
+        "wq_b": ParamSpec(lead + (m.q_lora_rank, nh, qk),
+                          la + ("q_lora", "heads", "head_dim")),
+        "wkv_a": ParamSpec(lead + (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                           la + ("embed", "kv_lora")),
+        "kv_norm": ParamSpec(lead + (m.kv_lora_rank,), la + ("norm",),
+                             init="ones", dtype=jnp.float32),
+        "wk_b": ParamSpec(lead + (m.kv_lora_rank, nh, m.qk_nope_head_dim),
+                          la + ("kv_lora", "heads", "head_dim")),
+        "wv_b": ParamSpec(lead + (m.kv_lora_rank, nh, m.v_head_dim),
+                          la + ("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec(lead + (nh, m.v_head_dim, d),
+                        la + ("heads", "head_dim", "embed")),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + eps) * scale
+    return y.astype(x.dtype)
+
+
+def _project(p, x, cfg, positions):
+    m = cfg.mla
+    ql = _rms(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c = _rms(kv[..., : m.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], positions,
+                        cfg.rope_theta)                     # [B,S,1,rope]
+    return q_nope, q_rope, c, k_rope
+
+
+class MLACache(NamedTuple):
+    c: jax.Array        # [B, S, kv_lora_rank] latent
+    k_rope: jax.Array   # [B, S, rope_dim]
+
+
+def mla_block(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+              use_flash: bool = False) -> jax.Array:
+    """Train/prefill: materialize per-head K/V from the latent."""
+    m = cfg.mla
+    q_nope, q_rope, c, k_rope = _project(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c, p["wv_b"])
+    nh = q_nope.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_rope.shape[:2] + (nh,) +
+                                  k_rope.shape[3:])], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad V up to the qk head dim so flash kernels see uniform shapes
+    o = flash_or_ref(q, k,
+                     jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                 (0, q.shape[-1] - v.shape[-1]))),
+                     positions, positions, window=0, use_flash=use_flash)
+    o = o[..., : m.v_head_dim]
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache: MLACache,
+               pos: jax.Array) -> tuple[jax.Array, MLACache]:
+    """Absorbed decode with latent cache. x: [B, 1, d], pos: [B]."""
+    m = cfg.mla
+    q_nope, q_rope, c_new, k_rope_new = _project(p, x, cfg, pos[:, None])
+    B = x.shape[0]
+    bidx = jnp.arange(B)
+    c_cache = cache.c.at[bidx, pos].set(c_new[:, 0])
+    r_cache = cache.k_rope.at[bidx, pos].set(k_rope_new[:, 0, 0])
+    # absorb: q_eff[h, r] = sum_k q_nope[h,k] wk_b[r,h,k]
+    q_eff = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["wk_b"])
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_eff.astype(jnp.float32),
+                         c_cache.astype(jnp.float32)) +
+              jnp.einsum("bhk,bsk->bhs", q_rope[:, 0].astype(jnp.float32),
+                         r_cache.astype(jnp.float32))) * scale
+    S = c_cache.shape[1]
+    valid = jnp.arange(S)[None] <= pos[:, None]
+    logits = jnp.where(valid[:, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, c_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhk->bhk", ctx.astype(x.dtype), p["wv_b"])
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
+    return out, MLACache(c_cache, r_cache)

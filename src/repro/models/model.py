@@ -1,0 +1,20 @@
+"""Model factory: ModelConfig -> LM or EncDec with mesh-aware sharding."""
+from __future__ import annotations
+
+from ..config import ModelConfig, ParallelConfig
+from ..parallel.sharding import make_rules
+from .encdec import EncDec
+from .lm import LM
+
+
+def build_model(cfg: ModelConfig, par: ParallelConfig | None = None,
+                mesh=None, rules=None, use_flash: bool = False,
+                use_ssd_kernel: bool = False):
+    par = par or ParallelConfig()
+    if rules is None and mesh is not None:
+        rules = make_rules(fsdp=par.fsdp,
+                           seq_shard_decode=par.seq_shard_decode)
+    if cfg.family == "encdec":
+        return EncDec(cfg, par, mesh=mesh, rules=rules, use_flash=use_flash)
+    return LM(cfg, par, mesh=mesh, rules=rules, use_flash=use_flash,
+              use_ssd_kernel=use_ssd_kernel)

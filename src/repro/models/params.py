@@ -1,0 +1,113 @@
+"""Declarative parameter trees.
+
+Models declare parameters as `ParamSpec` descriptors (shape + logical axes +
+initializer).  The same tree then serves three purposes:
+
+* `init_tree(key, tree)`        — materialize real weights (training / tests)
+* `abstract_tree(tree, ...)`    — ShapeDtypeStructs with NamedShardings for
+                                  the multi-pod dry-run (no allocation)
+* `shardings_tree(tree, ...)`   — in_shardings for jit
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import sharding_for
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "fan_in"          # fan_in | normal | zeros | ones | constant
+    scale: float = 1.0
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+ParamTree = dict  # nested dict[str, ParamTree | ParamSpec]
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_leaves_with_path(tree: ParamTree, prefix=()):
+    for k, v in tree.items():
+        if _is_spec(v):
+            yield prefix + (k,), v
+        else:
+            yield from tree_leaves_with_path(v, prefix + (k,))
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "constant":
+        return jnp.full(spec.shape, spec.scale, spec.dtype)
+    if spec.init == "fan_in":
+        # fan-in = product of dims up to the last ("output") dim heuristic:
+        # all but the trailing axis count as input dims for our conventions.
+        fan = max(1, math.prod(spec.shape[:-1])) if len(spec.shape) > 1 \
+            else spec.shape[0]
+        std = spec.scale / math.sqrt(fan)
+    else:  # normal
+        std = spec.scale
+    x = jax.random.truncated_normal(key, -3.0, 3.0, spec.shape, jnp.float32)
+    return (x * std).astype(spec.dtype)
+
+
+def init_tree(key: jax.Array, tree: ParamTree) -> dict:
+    leaves = list(tree_leaves_with_path(tree))
+    keys = jax.random.split(key, len(leaves))
+    flat = {path: _init_leaf(k, spec) for (path, spec), k in zip(leaves, keys)}
+    return _unflatten(flat)
+
+
+def _unflatten(flat: Mapping[tuple, Any]) -> dict:
+    out: dict = {}
+    for path, v in flat.items():
+        d = out
+        for k in path[:-1]:
+            d = d.setdefault(k, {})
+        d[path[-1]] = v
+    return out
+
+
+def abstract_tree(tree: ParamTree, rules, mesh) -> dict:
+    flat = {}
+    for path, spec in tree_leaves_with_path(tree):
+        sh = sharding_for(spec.axes, rules, mesh) if mesh is not None else None
+        flat[path] = jax.ShapeDtypeStruct(spec.shape, spec.dtype, sharding=sh)
+    return _unflatten(flat)
+
+
+def shardings_tree(tree: ParamTree, rules, mesh) -> dict:
+    flat = {path: sharding_for(spec.axes, rules, mesh)
+            for path, spec in tree_leaves_with_path(tree)}
+    return _unflatten(flat)
+
+
+def count_params(tree: ParamTree) -> int:
+    return sum(math.prod(s.shape) for _, s in tree_leaves_with_path(tree))
+
+
+def param_bytes(tree: ParamTree) -> int:
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+               for _, s in tree_leaves_with_path(tree))
+
+
+def cast_tree(params: dict, dtype) -> dict:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)

@@ -1,0 +1,269 @@
+"""Mamba-2 SSD (state-space duality) blocks.
+
+Train/prefill uses the chunked SSD algorithm (intra-chunk quadratic +
+inter-chunk state recurrence); this pure-jnp implementation is also the
+oracle for the Pallas `ssd` kernel.  Decode is the O(1)-per-token recurrence
+with a conv ring state.
+
+Shapes: x_in [B, S, d_model]; internal heads H = d_inner / head_dim (padded
+for TP); state N = cfg.ssm.d_state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig
+from ..parallel.sharding import padded
+from .params import ParamSpec
+
+
+def ssm_dims(cfg: ModelConfig, tp: int) -> tuple[int, int]:
+    """(padded heads, d_inner_padded)."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    h = padded(d_inner // s.head_dim, tp)
+    return h, h * s.head_dim
+
+
+def ssm_spec(cfg: ModelConfig, tp: int, layers: int | None = None) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    H, d_in = ssm_dims(cfg, tp)
+    hd = s.head_dim
+    N = s.d_state
+    lead = (layers,) if layers is not None else ()
+    la = ("layers",) if layers is not None else ()
+    return {
+        "wz": ParamSpec(lead + (d, H, hd), la + ("embed", "ssm_heads", "head_dim")),
+        "wx": ParamSpec(lead + (d, H, hd), la + ("embed", "ssm_heads", "head_dim")),
+        "wB": ParamSpec(lead + (d, N), la + ("embed", "state")),
+        "wC": ParamSpec(lead + (d, N), la + ("embed", "state")),
+        "wdt": ParamSpec(lead + (d, H), la + ("embed", "ssm_heads")),
+        "dt_bias": ParamSpec(lead + (H,), la + ("ssm_heads",), init="zeros",
+                             dtype=jnp.float32),
+        "A_log": ParamSpec(lead + (H,), la + ("ssm_heads",), init="constant",
+                           scale=0.5, dtype=jnp.float32),
+        "D": ParamSpec(lead + (H,), la + ("ssm_heads",), init="ones",
+                       dtype=jnp.float32),
+        "conv_x": ParamSpec(lead + (s.d_conv, H, hd),
+                            la + ("conv", "ssm_heads", "head_dim"),
+                            init="normal", scale=0.3),
+        "conv_BC": ParamSpec(lead + (s.d_conv, 2 * N), la + ("conv", "state"),
+                             init="normal", scale=0.3),
+        "norm": ParamSpec(lead + (H, hd), la + ("ssm_heads", "head_dim"),
+                          init="ones", dtype=jnp.float32),
+        "wo": ParamSpec(lead + (H, hd, d), la + ("ssm_heads", "head_dim", "embed")),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. u: [B, S, C]; w: [K, C]."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + u.shape[1]] * w[i] for i in range(K))
+    return out
+
+
+def segsum_exp(a: jax.Array) -> jax.Array:
+    """L[i, j] = exp(sum_{j<k<=i} a_k) for i>=j else 0.  a: [..., Q]."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]       # [..., i, j] = sum(j..i]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_reference(x: jax.Array, a: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                  chunk: int, init_state: jax.Array | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (sequential over chunks, like the Pallas kernel).
+
+    x: [B, S, H, P] inputs (already dt-scaled)
+    a: [B, S, H]    log-decay per step (dt * A, negative)
+    Bm, Cm: [B, S, N] input/output projections (single group, shared by heads)
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+
+    The per-chunk body is rematerialized, so the [Q, Q] decay/score matrices
+    never exist for more than one chunk at a time — the memory profile the
+    Pallas kernel has natively.
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    xc = x.reshape(B, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    ac = a.reshape(B, nc, Q, H).astype(jnp.float32).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32).transpose(1, 0, 2, 3)
+
+    s0 = jnp.zeros((B, H, P, N), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+
+    @jax.checkpoint
+    def body(state, inp):
+        xk, ak, Bk, Ck = inp                           # [B,Q,H,P] etc.
+        cum = jnp.cumsum(ak, axis=1)                   # [B,Q,H]
+        L = segsum_exp(ak.transpose(0, 2, 1))          # [B,H,Q,Q]
+        G = jnp.einsum("bqn,bkn->bqk", Ck, Bk)         # [B,Q,Q]
+        y = jnp.einsum("bhqk,bkhp->bqhp", G[:, None] * L,
+                       xk.astype(jnp.float32))
+        y += jnp.einsum("bqn,bhpn,bqh->bqhp", Ck, state, jnp.exp(cum))
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)   # [B,Q,H]
+        new_state = state * jnp.exp(cum[:, -1, :])[..., None, None] + \
+            jnp.einsum("bqn,bqh,bqhp->bhpn", Bk, decay_to_end,
+                       xk.astype(jnp.float32))
+        return new_state, y
+
+    final, ys = jax.lax.scan(body, s0, (xc, ac, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, final
+
+
+def ssd_reference_vec(x: jax.Array, a: jax.Array, Bm: jax.Array,
+                      Cm: jax.Array, chunk: int) -> tuple[jax.Array, jax.Array]:
+    """Loop-free (fully vectorized over chunks) SSD — used by the roofline
+    lowering where lax.scan bodies would be cost-counted once.  Memory-heavy;
+    the production path is the scanned `ssd_reference`.
+
+    flags.SSD_BF16 keeps the O(Q^2) decay/score tensors in bf16 (the §Perf
+    lever for the memory-bound mamba2 cells); the cumulative-sum / exp math
+    and the inter-chunk state stay fp32.
+    """
+    from .. import flags
+    wdt = jnp.bfloat16 if flags.SSD_BF16 else jnp.float32
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    xc = x.reshape(B, nc, Q, H, P)
+    ac = a.reshape(B, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N).astype(wdt)
+    Cc = Cm.reshape(B, nc, Q, N).astype(wdt)
+
+    L = segsum_exp(ac.transpose(0, 1, 3, 2)).astype(wdt)  # [B,nc,H,Q,Q]
+    G = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", (G[:, :, None] * L).astype(wdt),
+                        xc.astype(wdt),
+                        preferred_element_type=jnp.float32)
+    cum = jnp.cumsum(ac, axis=2)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum).astype(wdt)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_to_end,
+                        xc.astype(wdt),
+                        preferred_element_type=jnp.float32)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # [B,nc,H]
+    # inter-chunk recurrence, unrolled (nc is small)
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    entering = []
+    cur = s0
+    for c in range(nc):
+        entering.append(cur)
+        cur = cur * chunk_decay[:, c][..., None, None] + states[:, c]
+    entering = jnp.stack(entering, axis=1)             # [B,nc,H,P,N]
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, entering, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, cur
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array     # [B, K-1, H*hd + 2N] last conv inputs
+    state: jax.Array    # [B, H, hd, N]
+
+
+def _proj_inputs(p: dict, x_in: jax.Array, cfg: ModelConfig):
+    s = cfg.ssm
+    z = jnp.einsum("bsd,dhp->bshp", x_in, p["wz"])
+    xh = jnp.einsum("bsd,dhp->bshp", x_in, p["wx"])
+    Bm = jnp.einsum("bsd,dn->bsn", x_in, p["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", x_in, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x_in, p["wdt"])
+    return z, xh, Bm, Cm, dt
+
+
+def ssm_block(p: dict, x_in: jax.Array, cfg: ModelConfig,
+              use_kernel: bool = False) -> jax.Array:
+    """Train/prefill SSD mixer. x_in: [B, S, d_model]."""
+    s = cfg.ssm
+    B, S, _ = x_in.shape
+    z, xh, Bm, Cm, dt = _proj_inputs(p, x_in, cfg)
+    H, hd = xh.shape[2], xh.shape[3]
+    N = Bm.shape[-1]
+    # causal conv + silu on (x, B, C)
+    u = jnp.concatenate([xh.reshape(B, S, H * hd), Bm, Cm], axis=-1)
+    w = jnp.concatenate([p["conv_x"].reshape(s.d_conv, H * hd),
+                         p["conv_BC"]], axis=-1)
+    u = jax.nn.silu(_causal_conv(u, w).astype(jnp.float32)).astype(x_in.dtype)
+    xh = u[..., : H * hd].reshape(B, S, H, hd)
+    Bm, Cm = u[..., H * hd: H * hd + N], u[..., H * hd + N:]
+
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a = dtp * A                                        # [B,S,H] log decay
+    xs = xh.astype(jnp.float32) * dtp[..., None]
+    if use_kernel:
+        from ..kernels.ssd.ops import ssd
+        y, _ = ssd(xs, a, Bm, Cm, chunk=s.chunk_size)
+    else:
+        from .. import flags
+        pad = (-S) % s.chunk_size
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        fn = ssd_reference_vec if flags.ROOFLINE_MODE else ssd_reference
+        y, _ = fn(xs, a, Bm, Cm, chunk=s.chunk_size)
+        y = y[:, :S]
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    # gated RMSNorm then output projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = (y ** 2).mean(-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6) * p["norm"]).astype(x_in.dtype)
+    return jnp.einsum("bshp,hpd->bsd", y, p["wo"])
+
+
+def ssm_decode(p: dict, x_in: jax.Array, cfg: ModelConfig, cache: SSMCache
+               ) -> tuple[jax.Array, SSMCache]:
+    """One-token recurrence. x_in: [B, 1, d_model]."""
+    s = cfg.ssm
+    B = x_in.shape[0]
+    z, xh, Bm, Cm, dt = _proj_inputs(p, x_in, cfg)
+    H, hd = xh.shape[2], xh.shape[3]
+    N = Bm.shape[-1]
+    u_new = jnp.concatenate([xh.reshape(B, 1, H * hd), Bm, Cm], axis=-1)
+    # conv ring state: [B, K-1, C] of previous inputs
+    window = jnp.concatenate([cache.conv, u_new], axis=1)   # [B, K, C]
+    w = jnp.concatenate([p["conv_x"].reshape(s.d_conv, H * hd),
+                         p["conv_BC"]], axis=-1)
+    u = jax.nn.silu(jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w))
+    xh1 = u[:, : H * hd].reshape(B, H, hd)
+    Bm1, Cm1 = u[:, H * hd: H * hd + N], u[:, H * hd + N:]
+
+    dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtp * A)                                  # [B,H]
+    xs = xh1.astype(jnp.float32) * dtp[..., None]
+    new_state = cache.state * decay[..., None, None] + \
+        jnp.einsum("bhp,bn->bhpn", xs, Bm1.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm1.astype(jnp.float32))
+    y = y + xh1.astype(jnp.float32) * p["D"][:, None]
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    var = (y ** 2).mean(-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6) * p["norm"]).astype(x_in.dtype)
+    out = jnp.einsum("bhp,hpd->bd", y, p["wo"])[:, None]
+    return out, SSMCache(conv=window[:, 1:], state=new_state)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, tp: int) -> SSMCache:
+    s = cfg.ssm
+    H, d_in = ssm_dims(cfg, tp)
+    return SSMCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, d_in + 2 * s.d_state),
+                       jnp.bfloat16),
+        state=jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    )

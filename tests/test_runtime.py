@@ -1,0 +1,143 @@
+"""Runtime tests: training drives loss down, checkpoint/restart resilience,
+failure injection, elastic restore, data determinism, serving."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ParallelConfig, ServeConfig, TrainConfig
+from repro.configs import registry
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.runtime.serve import Request, ServeEngine
+from repro.runtime.train import SimulatedFailure, StragglerMonitor, Trainer
+
+
+def _tiny_cfg():
+    return registry.get_config("h2o_danube_3_4b", smoke=True)
+
+
+def _tcfg(tmp, steps=8, every=3):
+    return TrainConfig(global_batch=4, seq_len=32, lr=1e-2, warmup_steps=2,
+                       total_steps=steps, ckpt_every=every, ckpt_keep=2,
+                       ckpt_dir=str(tmp), ckpt_async=False, seed=1)
+
+
+def test_loss_decreases(tmp_path):
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    tr = Trainer(model, cfg, _tcfg(tmp_path, steps=30, every=100),
+                 ParallelConfig(remat="none", scan_layers=False))
+    rep = tr.run()
+    first = np.mean(rep.losses[:5])
+    last = np.mean(rep.losses[-5:])
+    assert last < first - 0.2, (first, last)
+
+
+def test_checkpoint_restart_bit_exact(tmp_path):
+    """Training 8 steps straight == 5 steps, restart, 3 more."""
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    t1 = Trainer(model, cfg, _tcfg(tmp_path / "a", steps=8, every=4),
+                 ParallelConfig(remat="none", scan_layers=False))
+    rep1 = t1.run()
+
+    t2 = Trainer(model, cfg, _tcfg(tmp_path / "b", steps=8, every=4),
+                 ParallelConfig(remat="none", scan_layers=False))
+    rep2a = t2.run(steps=5)          # stops after step 4, ckpt at step 3
+    t3 = Trainer(model, cfg, _tcfg(tmp_path / "b", steps=8, every=4),
+                 ParallelConfig(remat="none", scan_layers=False))
+    rep2b = t3.run(steps=8)          # resumes from ckpt
+    # the resumed run replays steps 4.. and must match the straight run
+    assert rep2b.losses[-1] == pytest.approx(rep1.losses[-1], rel=1e-4)
+
+
+def test_failure_injection_recovers(tmp_path):
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    crashed = {"done": False}
+
+    def injector(step):
+        if step == 5 and not crashed["done"]:
+            crashed["done"] = True
+            raise SimulatedFailure("node lost")
+
+    tr = Trainer(model, cfg, _tcfg(tmp_path, steps=8, every=2),
+                 ParallelConfig(remat="none", scan_layers=False),
+                 failure_injector=injector)
+    rep = tr.run()
+    assert rep.restarts == 1
+    assert np.isfinite(rep.final_loss)
+
+
+def test_elastic_restore_different_sharding(tmp_path):
+    """A checkpoint restores regardless of mesh: global arrays reshard."""
+    mgr = CheckpointManager(tmp_path, keep=2, async_write=False)
+    tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+            "opt": {"m": np.ones((8, 8), np.float32)}}
+    mgr.save(3, tree, {"step": 3})
+    like = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32),
+            "opt": {"m": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
+    restored, extra = mgr.restore(3, like)
+    assert extra["step"] == 3
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_write=False)
+    tree = {"w": np.ones((4, 4), np.float32)}
+    mgr.save(1, tree, {"step": 1})
+    victim = next((tmp_path / "step_00000001").glob("*.npy"))
+    arr = np.load(victim)
+    arr[0, 0] = 999.0
+    np.save(victim, arr)
+    with pytest.raises(IOError):
+        mgr.restore(1, {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)})
+
+
+def test_checkpoint_keep_k(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_write=False)
+    for s in range(5):
+        mgr.save(s, {"w": np.zeros(3, np.float32)}, {"step": s})
+    assert mgr.list_steps() == [3, 4]
+
+
+def test_data_determinism_and_sharding():
+    cfg = DataConfig(vocab_size=97, seq_len=16, global_batch=8, seed=7)
+    d1, d2 = SyntheticLM(cfg), SyntheticLM(cfg)
+    t1, l1 = d1.batch(11)
+    t2, l2 = d2.batch(11)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(l1, l2)
+    # labels are next tokens
+    np.testing.assert_array_equal(t1[:, 1:], l1[:, :-1])
+    # shards partition deterministically per (step, shard)
+    a0, _ = d1.batch(5, shard=0, n_shards=2)
+    a1, _ = d1.batch(5, shard=1, n_shards=2)
+    assert a0.shape == (4, 16)
+    assert not np.array_equal(a0, a1)
+
+
+def test_straggler_monitor_flags_outlier():
+    m = StragglerMonitor()
+    for s in range(20):
+        assert not m.observe(s, 0.1 + 0.001 * (s % 3))
+    assert m.observe(20, 1.5)
+    assert len(m.events) == 1
+
+
+def test_serve_engine_batched(tmp_path):
+    cfg = registry.get_config("mamba2_130m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, cfg, ServeConfig(batch=4, max_seq=64), params)
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, 5).astype(np.int32), max_new_tokens=4))
+    done = eng.run_until_drained(max_steps=200)
+    assert len(done) == 6
+    assert all(len(r.out) == 4 for r in done)

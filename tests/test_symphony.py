@@ -1,0 +1,141 @@
+"""Unit + property tests for the Symphony state machine (paper Alg. 1)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.symphony import (Packet, SymphonyParams, SymphonyState,
+                                 init_state, marking_probability,
+                                 process_packet, process_packet_batch,
+                                 window_update)
+
+P = SymphonyParams()
+
+
+def _pkt(step, psn, last=False):
+    return Packet(jnp.int32(step), jnp.float32(psn), jnp.asarray(last))
+
+
+def test_last_bit_advances_step_min():
+    st0 = init_state()
+    st1, _ = process_packet(st0, _pkt(3, 100, last=True), P, jnp.float32(1.0))
+    assert int(st1.step_min) == 4
+    assert float(st1.psn_rec) == 0.0
+
+
+def test_lazy_correction_on_lagging_packet():
+    st0 = init_state()._replace(step_min=jnp.int32(5))
+    st1, _ = process_packet(st0, _pkt(2, 77), P, jnp.float32(1.0))
+    assert int(st1.step_min) == 2
+    assert float(st1.psn_rec) == 77.0
+
+
+def test_aligned_packet_tracks_max_psn():
+    st0 = init_state()._replace(step_min=jnp.int32(2),
+                                psn_rec=jnp.float32(50.0))
+    st1, _ = process_packet(st0, _pkt(2, 80), P, jnp.float32(1.0))
+    assert float(st1.psn_rec) == 80.0
+    st2, _ = process_packet(st1, _pkt(2, 10), P, jnp.float32(1.0))
+    assert float(st2.psn_rec) == 80.0  # max, not last
+
+
+def test_duplicate_packets_idempotent_state():
+    """Retransmissions must not corrupt state (paper §3.4.1)."""
+    st0 = init_state()._replace(step_min=jnp.int32(3),
+                                psn_rec=jnp.float32(40.0))
+    st1, _ = process_packet(st0, _pkt(3, 40), P, jnp.float32(1.0))
+    st2, _ = process_packet(st1, _pkt(3, 40), P, jnp.float32(1.0))
+    assert int(st1.step_min) == int(st2.step_min)
+    assert float(st1.psn_rec) == float(st2.psn_rec)
+
+
+def test_lagging_never_marked():
+    st0 = init_state()._replace(step_min=jnp.int32(5),
+                                psn_rec=jnp.float32(1000.0),
+                                alpha=jnp.float32(64.0))
+    for step in [0, 3, 5]:
+        p = marking_probability(jnp.int32(step), jnp.float32(1e9),
+                                st0.step_min, st0.psn_rec, st0.alpha, P)
+        assert float(p) == 0.0
+
+
+def test_warmup_guard_suppresses_marking():
+    p = marking_probability(jnp.int32(9), jnp.float32(1e9), jnp.int32(1),
+                            jnp.float32(float(P.n_warmup)), jnp.float32(64.0), P)
+    assert float(p) == 0.0
+
+
+def test_window_update_eq5():
+    # rho >= tau -> alpha += 1
+    st0 = init_state()._replace(cnt_total=jnp.float32(100.0),
+                                cnt_op=jnp.float32(30.0))
+    st1 = window_update(st0, P)
+    assert float(st1.alpha) == 2.0
+    assert float(st1.cnt_total) == 0.0 and float(st1.cnt_op) == 0.0
+    assert float(st1.psn_rec) == 0.0     # time-windowed max reset
+    # rho < tau -> alpha decays, floor 1
+    st2 = init_state()._replace(cnt_total=jnp.float32(100.0),
+                                cnt_op=jnp.float32(10.0))
+    assert float(window_update(st2, P).alpha) == 1.0
+
+
+def test_sample_guard():
+    st0 = init_state()._replace(cnt_total=jnp.float32(5.0),
+                                cnt_op=jnp.float32(5.0))
+    assert float(window_update(st0, P).alpha) == 1.0  # skipped (too few)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    steps=st.lists(st.integers(0, 30), min_size=1, max_size=60),
+    psns=st.lists(st.integers(0, 10000), min_size=60, max_size=60),
+    lasts=st.lists(st.booleans(), min_size=60, max_size=60),
+    us=st.lists(st.floats(0, 1, exclude_max=True), min_size=60, max_size=60),
+)
+def test_property_invariants(steps, psns, lasts, us):
+    n = len(steps)
+    state = init_state()
+    for i in range(n):
+        prev = state
+        state, mark = process_packet(
+            state, _pkt(steps[i], psns[i], lasts[i]), P,
+            jnp.float32(us[i]))
+        # alpha only changes at window boundaries
+        assert float(state.alpha) == float(prev.alpha)
+        # counters are monotone within a window
+        assert float(state.cnt_total) == float(prev.cnt_total) + 1
+        assert float(state.cnt_op) >= float(prev.cnt_op)
+        # step_min bounded by the packets seen
+        assert int(state.step_min) <= max(s + 1 for s in steps[:i + 1])
+        # lagging/aligned packets are never marked
+        if steps[i] <= int(prev.step_min):
+            assert not bool(mark)
+        if i % 10 == 9:
+            state = window_update(state, P)
+            assert 1.0 <= float(state.alpha) <= float(P.alpha_max)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_scan_matches_loop(seed):
+    """process_packet_batch (lax.scan) == the python loop."""
+    rng = np.random.default_rng(seed)
+    n = 40
+    steps = rng.integers(0, 8, n).astype(np.int32)
+    psns = rng.integers(0, 1000, n).astype(np.float32)
+    lasts = rng.random(n) < 0.1
+    us = rng.random(n).astype(np.float32)
+    state = init_state()
+    marks_loop = []
+    for i in range(n):
+        state, m = process_packet(state, _pkt(steps[i], psns[i], lasts[i]),
+                                  P, jnp.float32(us[i]))
+        marks_loop.append(bool(m))
+    state2, marks = process_packet_batch(
+        init_state(), jnp.asarray(steps), jnp.asarray(psns),
+        jnp.asarray(lasts), jnp.asarray(us), P)
+    assert marks_loop == [bool(x) for x in marks]
+    assert int(state.step_min) == int(state2.step_min)
+    np.testing.assert_allclose(float(state.psn_rec), float(state2.psn_rec))
