@@ -1,23 +1,36 @@
-"""Shared scenario builders + result caching for the paper benchmarks.
+"""Shared scenario registry + result caching for the paper benchmarks.
 
 All network scenarios follow paper Table 1 defaults: 4 ToR x 4 spine,
 10 Gbps, 32 nodes arranged as 4 parallel rings of 8 (the 8x4 logical 2-D),
 chunk 8 MB, RED(50/100KB, 0.2), DCQCN-style CC, tau=0.25, T_win=100us,
 k=0.01.  Larger scales (128 nodes = 32x4) follow the same pattern.
+
+The declarative **scenario registry** is the single source of truth for
+benchmark and test setups: each entry builds a ``Built(topo, wl, cfg,
+routing)`` tuple from keyword overrides.  Fig-scripts and the system tests
+both consume it::
+
+    from benchmarks.common import build_scenario
+    topo, wl, cfg, routing = build_scenario("table1_ring", passes=4)
+
+Register new scenarios with the :func:`scenario` decorator.
 """
 from __future__ import annotations
 
 import json
 import os
 import time
+from dataclasses import dataclass
 from pathlib import Path
+from typing import Callable, NamedTuple
 
 import jax
 import numpy as np
 
-from repro.core.netsim import (SimParams, WorkloadBuilder, make_leaf_spine,
-                               metrics, scale_for_hosts, simulate,
-                               simulate_seeds)
+from repro.core.netsim import (SimParams, Topology, Workload, WorkloadBuilder,
+                               make_fat_tree, make_leaf_spine, metrics,
+                               scale_for_hosts, simulate, simulate_seeds)
+from repro.core.netsim.topology import DEFAULT_LINK_BPS as LINK_BPS
 
 CACHE = Path(__file__).resolve().parent / ".cache.json"
 QUICK = os.environ.get("BENCH_QUICK", "0") != "0"
@@ -36,6 +49,54 @@ def cached(name: str, fn):
     return out
 
 
+# --------------------------------------------------------------- registry
+class Built(NamedTuple):
+    """A fully-materialized scenario ready for ``simulate``."""
+    topo: Topology
+    wl: Workload
+    cfg: SimParams
+    routing: str = "ecmp"
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    build: Callable[..., Built]
+
+
+SCENARIOS: dict[str, Scenario] = {}
+
+
+def scenario(name: str, description: str = ""):
+    """Register a scenario builder under ``name``."""
+    def deco(fn):
+        SCENARIOS[name] = Scenario(name, description, fn)
+        return fn
+    return deco
+
+
+def build_scenario(name: str, **overrides) -> Built:
+    """Materialize a registered scenario with keyword overrides."""
+    try:
+        sc = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; have {list_scenarios()}")
+    return sc.build(**overrides)
+
+
+def list_scenarios() -> list[str]:
+    return sorted(SCENARIOS)
+
+
+def _horizon_cfg(wl, mult: float = 4.0, dt: float = 10e-6,
+                 **kw) -> SimParams:
+    """SimParams sized to a multiple of the job-0 lockstep lower bound."""
+    ideal = metrics.ideal_cct(wl, 0, LINK_BPS)
+    return SimParams(n_ticks=int(ideal * mult / dt), dt=dt, window=64, **kw)
+
+
+# ------------------------------------------------- Table-1 building blocks
 def table1_topo(n_hosts: int = 32):
     if n_hosts == 32:
         return make_leaf_spine(32, 4, 4)
@@ -54,6 +115,118 @@ def table1_workload(n_hosts: int = 32, ring: int = 8, chunk: float = 8e6,
     return b.build()
 
 
+@scenario("table1_ring",
+          "Paper Table-1: 2-tier leaf-spine, parallel 1-D ring allreduce")
+def _table1_ring(n_hosts: int = 32, ring: int = 8, chunk: float = 8e6,
+                 passes: int = 6, barrier: bool = False,
+                 compute_gap: float = 0.0, chunk_schedule=None,
+                 horizon_mult: float = 4.0, sym: bool = False) -> Built:
+    topo = table1_topo(n_hosts)
+    wl = table1_workload(n_hosts, ring, chunk, passes, barrier, compute_gap,
+                         chunk_schedule)
+    return Built(topo, wl, _horizon_cfg(wl, horizon_mult, sym_on=sym))
+
+
+@scenario("table1_2d",
+          "Paper §4.6: 2-D ring collective on the Table-1 fabric")
+def _table1_2d(n_hosts: int = 32, d0: int = 8, chunk: float = 8e6,
+               passes: int = 3, horizon_mult: float = 5.0,
+               sym: bool = False) -> Built:
+    topo = table1_topo(n_hosts)
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(n_hosts)), ring_size=d0, passes=passes,
+                   chunk_bytes=chunk, dims=(d0, n_hosts // d0))
+    wl = b.build()
+    return Built(topo, wl, _horizon_cfg(wl, horizon_mult, sym_on=sym))
+
+
+@scenario("two_flow_fig9",
+          "Paper Fig. 9 hardware prototype: two flows, one ToR egress port")
+def _two_flow_fig9(delay_a: float = 0.25, size: float = 1e9,
+                   sym: bool = False) -> Built:
+    # hosts 0,1 send to host 2: both flows share the ToR egress port
+    # (acc_down of host 2), exactly the prototype's single-port contention.
+    # Same job, flow B tagged one step ahead (step in the UDP sport, §4.7):
+    # B is the outpacing flow, A the lagging one.
+    topo = make_leaf_spine(4, 2, 2)
+    b = WorkloadBuilder()
+    b.add_chain_job(pairs=[(0, 2), (1, 2)], steps=1, chunk_bytes=size,
+                    step_offsets=[0, 1], flow_starts=[delay_a, 0.0])
+    wl = b.build()
+    t_end = 3.2 * (size / 1.25e9) + delay_a + 0.2
+    cfg = SimParams(n_ticks=int(t_end / 20e-6), dt=20e-6, window=8,
+                    sym_on=sym)
+    return Built(topo, wl, cfg, routing="balanced")
+
+
+@scenario("multi_tenant_pair",
+          "Paper Fig. 7a/b: two co-located jobs, job B delayed")
+def _multi_tenant_pair(n_hosts: int = 64, ring: int = 8, chunk: float = 8e6,
+                       passes: int = 3, delay: float = 0.1,
+                       sym: bool = False) -> Built:
+    topo = table1_topo(n_hosts)
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(n_hosts)), ring_size=ring,
+                   chunk_bytes=chunk, passes=passes, barrier=False)
+    b.add_ring_job(hosts=list(range(n_hosts)), ring_size=ring,
+                   chunk_bytes=chunk, passes=passes, barrier=False,
+                   start_time=delay)
+    wl = b.build()
+    horizon = int((0.15 * passes + 0.8) / 10e-6)
+    return Built(topo, wl, SimParams(n_ticks=horizon, window=64, sym_on=sym))
+
+
+@scenario("fat_tree_ring",
+          "3-tier multi-pod fat-tree, inter-pod interleaved ring allreduce")
+def _fat_tree_ring(n_pods: int = 2, tors_per_pod: int = 2,
+                   spines_per_pod: int = 2, hosts_per_tor: int = 4,
+                   n_cores: int | None = None,
+                   core_oversubscription: float = 1.0,
+                   ring: int | None = None, chunk: float = 4e6,
+                   passes: int = 2, barrier: bool = False,
+                   horizon_mult: float = 6.0, sym: bool = False) -> Built:
+    topo = make_fat_tree(n_pods, tors_per_pod, spines_per_pod, hosts_per_tor,
+                         n_cores, core_oversubscription=core_oversubscription)
+    n = topo.n_hosts
+    ring = n // 2 if ring is None else ring
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(n)), ring_size=ring, chunk_bytes=chunk,
+                   passes=passes, barrier=barrier)
+    wl = b.build()
+    return Built(topo, wl, _horizon_cfg(wl, horizon_mult, sym_on=sym))
+
+
+@scenario("fat_tree_halving_doubling",
+          "3-tier fat-tree, recursive halving-doubling allreduce")
+def _fat_tree_hd(n_pods: int = 2, tors_per_pod: int = 2,
+                 spines_per_pod: int = 2, hosts_per_tor: int = 4,
+                 core_oversubscription: float = 1.0, chunk: float = 4e6,
+                 passes: int = 1, horizon_mult: float = 6.0,
+                 sym: bool = False) -> Built:
+    topo = make_fat_tree(n_pods, tors_per_pod, spines_per_pod, hosts_per_tor,
+                         core_oversubscription=core_oversubscription)
+    b = WorkloadBuilder()
+    b.add_halving_doubling_job(hosts=list(range(topo.n_hosts)),
+                               chunk_bytes=chunk, passes=passes)
+    wl = b.build()
+    return Built(topo, wl, _horizon_cfg(wl, horizon_mult, sym_on=sym))
+
+
+@scenario("hierarchical_tor",
+          "Hierarchical allreduce: intra-ToR rings + inter-ToR leader ring")
+def _hierarchical_tor(n_hosts: int = 32, n_tors: int = 4, n_spines: int = 4,
+                      chunk: float = 8e6, passes: int = 2,
+                      horizon_mult: float = 6.0, sym: bool = False) -> Built:
+    topo = make_leaf_spine(n_hosts, n_tors, n_spines)
+    b = WorkloadBuilder()
+    b.add_hierarchical_job(hosts=list(range(n_hosts)),
+                           group_size=topo.hosts_per_tor,
+                           chunk_bytes=chunk, passes=passes)
+    wl = b.build()
+    return Built(topo, wl, _horizon_cfg(wl, horizon_mult, sym_on=sym))
+
+
+# ------------------------------------------------------------ run helpers
 def default_params(n_ticks: int, sym: bool = False, **kw) -> SimParams:
     return SimParams(n_ticks=n_ticks, window=64, sym_on=sym, **kw)
 
@@ -75,12 +248,19 @@ def run_one(topo, wl, cfg, routing="ecmp", seed=0, **bg):
     return jax.block_until_ready(res)
 
 
+def run_scenario(name: str, seed: int = 0, **overrides):
+    """Build and run a registered scenario; returns (built, result)."""
+    built = build_scenario(name, **overrides)
+    return built, run_one(built.topo, built.wl, built.cfg,
+                          routing=built.routing, seed=seed)
+
+
 def summarize(res, wl, cfg, job=0):
     cct = metrics.cct_seconds(res, wl, cfg)
     return {
         "cct_s": float(cct[job]) if np.isfinite(cct[job]) else None,
         "max_overlap": int(metrics.max_overlap(res, cfg, job)),
-        "ideal_s": metrics.ideal_cct(wl, job, 10e9 / 8),
+        "ideal_s": metrics.ideal_cct(wl, job, LINK_BPS),
     }
 
 

@@ -9,18 +9,15 @@ light perturbations reach ~10 overlap / ~7% CCT inflation.
 """
 import numpy as np
 
-from .common import (QUICK, cached, default_params, run_one, summarize,
-                     table1_topo, table1_workload)
+from .common import QUICK, build_scenario, cached, run_one, summarize
 
 
 def run():
-    topo = table1_topo(32)
     passes = 4 if QUICK else 6
-    wl = table1_workload(passes=passes)
+    topo, wl, cfg, _ = build_scenario("table1_ring", passes=passes,
+                                      horizon_mult=4.0)
     from repro.core.netsim import metrics
     ideal = metrics.ideal_cct(wl, 0, 10e9 / 8)
-    horizon = int(ideal * 4.0 / 10e-6)
-    cfg = default_params(horizon)
 
     rows = {}
     rows["theoretical"] = {"cct_s": ideal, "max_overlap": 1, "ideal_s": ideal}

@@ -7,25 +7,22 @@ import numpy as np
 
 from repro.core.netsim import metrics
 
-from .common import (QUICK, cached, default_params, run_seeds, seeds_for,
-                     table1_topo, table1_workload)
+from .common import QUICK, build_scenario, cached, run_seeds, seeds_for
 
 
 def run():
-    topo = table1_topo(32)
     passes = 4 if QUICK else 6
-    wl = table1_workload(passes=passes)
-    ideal = metrics.ideal_cct(wl, 0, 10e9 / 8)
-    horizon = int(ideal * 4.0 / 10e-6)
+    topo, wl, base_cfg, _ = build_scenario("table1_ring", passes=passes,
+                                           horizon_mult=4.0)
     seeds = seeds_for(6, 3)
 
     out = {}
     for name, cfg in [
-        ("baseline", default_params(horizon)),
-        ("symphony", default_params(horizon, sym=True)),
+        ("baseline", base_cfg),
+        ("symphony", base_cfg._replace(sym_on=True)),
         ("symphony_late_start",
-         default_params(horizon, sym=True,
-                        sym_start_tick=horizon // 4)),
+         base_cfg._replace(sym_on=True,
+                           sym_start_tick=base_cfg.n_ticks // 4)),
     ]:
         res = run_seeds(topo, wl, cfg, "ecmp", seeds)
         cct = metrics.cct_seconds(res, wl, cfg)[:, 0]

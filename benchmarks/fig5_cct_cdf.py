@@ -8,23 +8,20 @@ import numpy as np
 
 from repro.core.netsim import metrics
 
-from .common import (QUICK, cached, default_params, run_seeds, seeds_for,
-                     table1_topo, table1_workload)
+from .common import QUICK, build_scenario, cached, run_seeds, seeds_for
 
 
 def run():
-    topo = table1_topo(32)
     passes = 2 if QUICK else 3
-    wl = table1_workload(passes=passes)
-    ideal = metrics.ideal_cct(wl, 0, 10e9 / 8)
-    horizon = int(ideal * 4.5 / 10e-6)
+    topo, wl, base_cfg, _ = build_scenario("table1_ring", passes=passes,
+                                           horizon_mult=4.5)
     seeds = seeds_for(12, 4)
 
     out = {}
     for name, cfg in [
-        ("baseline", default_params(horizon)),
-        ("pq", default_params(horizon, pq_on=True)),
-        ("symphony", default_params(horizon, sym=True)),
+        ("baseline", base_cfg),
+        ("pq", base_cfg._replace(share_policy="pq")),
+        ("symphony", base_cfg._replace(sym_on=True)),
     ]:
         res = run_seeds(topo, wl, cfg, "ecmp", seeds)
         cct = metrics.cct_seconds(res, wl, cfg)[:, 0]

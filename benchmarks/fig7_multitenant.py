@@ -8,31 +8,20 @@ import numpy as np
 
 from repro.core.netsim import WorkloadBuilder, metrics
 
-from .common import (QUICK, cached, default_params, run_seeds, seeds_for,
-                     table1_topo)
-
-
-def _two_job_wl(n_hosts=64, ring=8, chunk=8e6, passes=3, delay=0.1):
-    b = WorkloadBuilder()
-    b.add_ring_job(hosts=list(range(n_hosts)), ring_size=ring,
-                   chunk_bytes=chunk, passes=passes, barrier=False)
-    b.add_ring_job(hosts=list(range(n_hosts)), ring_size=ring,
-                   chunk_bytes=chunk, passes=passes, barrier=False,
-                   start_time=delay)
-    return b.build()
+from .common import (QUICK, build_scenario, cached, default_params,
+                     run_seeds, seeds_for, table1_topo)
 
 
 def run():
     out = {}
-    # ---- two-job co-location
+    # ---- two-job co-location (registry scenario, Fig. 7a/b)
     hosts = 32 if QUICK else 64
-    topo = table1_topo(hosts)
     passes = 2 if QUICK else 3
-    wl = _two_job_wl(hosts, passes=passes)
-    horizon = int((0.15 * passes + 0.8) / 10e-6)
+    topo, wl, base_cfg, _ = build_scenario("multi_tenant_pair",
+                                           n_hosts=hosts, passes=passes)
     seeds = seeds_for(10, 3)
-    for name, cfg in [("baseline", default_params(horizon)),
-                      ("symphony", default_params(horizon, sym=True))]:
+    for name, cfg in [("baseline", base_cfg),
+                      ("symphony", base_cfg._replace(sym_on=True))]:
         res = run_seeds(topo, wl, cfg, "ecmp", seeds)
         cct = metrics.cct_seconds(res, wl, cfg)
         spans = [metrics.flow_span_seconds(res, wl, cfg, job=j)

@@ -10,8 +10,8 @@ import numpy as np
 from repro.core.netsim import metrics
 from repro.core.symphony import SymphonyParams
 
-from .common import (QUICK, cached, default_params, run_seeds, seeds_for,
-                     table1_topo, table1_workload)
+from .common import (QUICK, build_scenario, cached, default_params,
+                     run_seeds, seeds_for, table1_topo, table1_workload)
 
 
 def _gain(topo, wl, cfg_b, cfg_s, seeds, routing="ecmp", **bg):
@@ -45,14 +45,10 @@ def run():
                   routing="balanced", bg_base=bg)
         out[f"imbalance_{ratio}"] = {"jct_improvement": g}
 
-    # (b) k sweep on 2-D ring pattern
+    # (b) k sweep on 2-D ring pattern (registry scenario)
     d0 = 8 if hosts == 32 else 16
-    d1 = hosts // d0
-    from repro.core.netsim import WorkloadBuilder
-    b2 = WorkloadBuilder()
-    b2.add_ring_job(hosts=list(range(hosts)), ring_size=d0, passes=passes,
-                    chunk_bytes=8e6, dims=(d0, d1))
-    wl2 = b2.build()
+    _, wl2, _, _ = build_scenario("table1_2d", n_hosts=hosts, d0=d0,
+                                  passes=passes)
     horizon2 = int((0.25 * passes + 0.6) / 10e-6)
     for k in ([1e-4, 1e-3, 1e-2, 1e-1] if not QUICK else [1e-3, 1e-2, 1e-1]):
         cfg_s = default_params(horizon2, sym=True)._replace(

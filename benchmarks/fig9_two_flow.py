@@ -8,28 +8,16 @@ We reproduce it as a 2-host netsim scenario: each "flow" is a 1-step ring job
 """
 import numpy as np
 
-from repro.core.netsim import (SimParams, WorkloadBuilder, make_leaf_spine,
-                               metrics, simulate)
-
-from .common import QUICK, cached
+from .common import QUICK, cached, run_scenario
 
 
 def _scenario(delay_a: float, sym: bool):
-    # hosts 0,1 send to host 2: both flows share the ToR egress port
-    # (acc_down of host 2), exactly the prototype's single-port contention.
-    # Same job, flow B tagged one step ahead (step in the UDP sport, §4.7):
-    # B is the outpacing flow, A the lagging one.
-    topo = make_leaf_spine(4, 2, 2)
-    b = WorkloadBuilder()
+    # See the "two_flow_fig9" registry entry: hosts 0,1 send to host 2
+    # through one ToR egress port; flow B is tagged one step ahead.
     size = 0.25e9 if QUICK else 1e9
-    b.add_chain_job(pairs=[(0, 2), (1, 2)], steps=1, chunk_bytes=size,
-                    step_offsets=[0, 1], flow_starts=[delay_a, 0.0])
-    wl = b.build()
-    t_end = 3.2 * (size / 1.25e9) + delay_a + 0.2
-    cfg = SimParams(n_ticks=int(t_end / 20e-6), dt=20e-6, window=8,
-                    sym_on=sym)
-    res = simulate(topo, wl, cfg, routing="balanced", seed=0)
-    ft = np.asarray(res.finish_ticks) * cfg.dt
+    built, res = run_scenario("two_flow_fig9", delay_a=delay_a, size=size,
+                              sym=sym)
+    ft = np.asarray(res.finish_ticks) * built.cfg.dt
     return float(ft[0] - delay_a), float(ft[1])   # per-flow completion times
 
 

@@ -6,12 +6,11 @@ import jax
 
 from repro.core.netsim import simulate, simulate_seeds
 
-from .common import cached, default_params, table1_topo, table1_workload
+from .common import build_scenario, cached, default_params
 
 
 def run():
-    topo = table1_topo(32)
-    wl = table1_workload(passes=2, barrier=False)
+    topo, wl, _, _ = build_scenario("table1_ring", passes=2)
     n_ticks = 30_000
     cfg = default_params(n_ticks, sym=True)
 

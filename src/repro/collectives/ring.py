@@ -28,7 +28,8 @@ import numpy as np
 
 
 def _axis_size(axis: str) -> int:
-    return jax.lax.axis_size(axis)
+    from ..compat import axis_size
+    return axis_size(axis)
 
 
 def _perm(n: int, shift: int = 1):

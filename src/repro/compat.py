@@ -1,0 +1,65 @@
+"""Portability shims for jax APIs that moved/renamed after the 0.4.x line.
+
+The training/serving stack targets current jax (``jax.shard_map`` with
+``check_vma``/``axis_names``, ``jax.sharding.AxisType``,
+``jax.lax.axis_size``); this module maps those onto the older spellings
+(``jax.experimental.shard_map`` with ``check_rep``/``auto``, no axis types,
+``psum(1, axis)``) so the same code runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax.sharding import AxisType  # noqa: F401  (jax >= 0.5)
+    _NEW = True
+except ImportError:
+    AxisType = None
+    _NEW = False
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with every axis in Auto mode where supported."""
+    if _NEW:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` without replication checking.
+
+    ``axis_names`` restricts manual mode to those axes (the rest stay
+    automatic); on old jax this is expressed through the ``auto`` set.
+    """
+    if _NEW:
+        kw = {"check_vma": False}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {"check_rep": False}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def axis_size(axis) -> int:
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)   # classic idiom: folds to a static int
+
+
+def manual_axes() -> set[str]:
+    """Mesh axes that are Manual in the current trace (inside shard_map)."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or not am.axis_names:
+            return set()
+        return {n for n, t in zip(am.axis_names, am.axis_types)
+                if "Manual" in str(t)}
+    import jax.core as core
+    try:   # on 0.4.x the bound axis names are exactly the manual axes
+        return set(core.unsafe_get_axis_names_DO_NOT_USE())
+    except Exception:
+        return set()

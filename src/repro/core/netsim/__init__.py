@@ -1,11 +1,17 @@
-from . import metrics, topology, workload
-from .simulator import (SimParams, SimResult, simulate, simulate_core,
-                        simulate_seeds)
-from .topology import Topology, make_leaf_spine, scale_for_hosts
+from . import metrics, stages, topology, workload
+from .simulator import (SimParams, SimResult, Static, build_static,
+                        link_domains, simulate, simulate_core, simulate_seeds)
+from .stages import SHARE_POLICIES, EngineCtx, EngineState
+from .topology import (FatTree, LeafSpine, Topology, make_fat_tree,
+                       make_leaf_spine, scale_for_hosts)
 from .workload import Workload, WorkloadBuilder
 
 __all__ = [
-    "SimParams", "SimResult", "simulate", "simulate_core", "simulate_seeds",
-    "Topology", "make_leaf_spine", "scale_for_hosts",
-    "Workload", "WorkloadBuilder", "metrics", "topology", "workload",
+    "SimParams", "SimResult", "Static", "simulate", "simulate_core",
+    "simulate_seeds", "build_static", "link_domains",
+    "SHARE_POLICIES", "EngineCtx", "EngineState",
+    "Topology", "LeafSpine", "FatTree", "make_leaf_spine", "make_fat_tree",
+    "scale_for_hosts",
+    "Workload", "WorkloadBuilder", "metrics", "stages", "topology",
+    "workload",
 ]

@@ -72,13 +72,19 @@ def flow_span_seconds(res: SimResult, wl: Workload, cfg: SimParams,
 
 def ideal_cct(wl: Workload, job: int, link_bps: float) -> float:
     """Theoretical lockstep lower bound: every step takes chunk/bandwidth,
-    steps are serial, plus compute gaps."""
+    steps are serial, plus compute gaps.  Handles multi-phase collectives
+    (2-D rings, halving-doubling, hierarchical) whose phases run different
+    step counts: segment k serializes the max step count among the flows
+    participating in phase k % n_phases."""
     jmask = np.asarray(wl.job) == job
-    sps = int(np.asarray(wl.steps_per_seg)[jmask][0])
+    sps_f = np.asarray(wl.steps_per_seg)[jmask]
+    phase_f = np.asarray(wl.phase)[jmask]
     passes = int(np.asarray(wl.n_passes)[job])
     nph = int(np.asarray(wl.n_phases)[job])
+    phase_sps = np.asarray([sps_f[phase_f == q].max() for q in range(nph)])
     per_seg = np.asarray(wl.chunk_sched)[job, :passes * nph]
-    comm = float(np.sum(per_seg * sps / link_bps))
+    seg_sps = phase_sps[np.arange(passes * nph) % nph]
+    comm = float(np.sum(per_seg * seg_sps / link_bps))
     return comm + passes * float(np.asarray(wl.compute_gap)[job])
 
 

@@ -1,7 +1,13 @@
-"""Fluid-flow network simulator for ring collectives (our Astra-Sim + NS-3).
+"""Fluid-flow network simulator for ring-style collectives (our
+Astra-Sim + NS-3), built as a staged engine over a generic link table.
 
-One `lax.scan` over fixed ticks of `dt` seconds. All state is arrays, so the
-whole simulation jits and vmaps over seeds/parameters.
+One `lax.scan` over fixed ticks of `dt` seconds.  All state is arrays, so
+the whole simulation jits and vmaps over seeds/parameters.  The per-tick
+body is not monolithic: it is composed from the individually-testable stage
+functions in :mod:`repro.core.netsim.stages` (start gating, route selection,
+bandwidth sharing, queues/RED, Symphony marking, DCQCN rate control,
+segment/job progress, metrics) — `simulate_core` only assembles them into
+the scan and handles recording.
 
 Entities
 --------
@@ -12,15 +18,20 @@ instance    (f, w): one in-flight step-send of slot f. Steps pipeline (a node
             phenomenon the paper studies (Fig. 1e). W = cfg.window slots,
             keyed by s % W.
 link        rows of the Topology table + one trailing "null" link with
-            infinite capacity (padding for intra-ToR routes).
+            infinite capacity (padding for short routes).
 
-Per tick
---------
-1. starts: gate on segment barrier + ring data dependency + slot availability
-2. link loads -> proportional (or 2-class PQ) bandwidth shares -> progress
-3. queues -> RED marking; Symphony per-(link, job) state -> selective marking
-4. DCQCN-style rate control per instance, driven by accumulated mark prob.
-5. completions advance `done_upto`, segment barriers, and job finish times
+Generality
+----------
+* Topology is any :class:`~repro.core.netsim.topology.Topology` (2-tier
+  leaf-spine, 3-tier multi-pod fat-tree, ...): routes are variable-hop
+  ``[F, H]`` rows; per-step ECMP re-hashes over the per-flow candidate-path
+  table ``[F, P, H]`` instead of assuming one switch tier.
+* Bandwidth sharing is pluggable (``SimParams.share_policy``):
+  ``proportional`` (default), ``pq`` strict 2-class priority, or ``wfq``
+  weighted-fair across jobs (weights via ``build_static(job_weight=...)``).
+* Symphony's deployment tier is configurable (``SimParams.deploy``):
+  ``"tor"`` (ToR-only, the paper's §5 default), ``"all"`` (every switch),
+  ``"spine"`` (spine/core only).
 
 Time is kept in integer ticks (i32) so float32 never loses precision.
 """
@@ -33,15 +44,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..symphony import SymphonyParams, marking_probability
-from .topology import Topology
-from .workload import Workload, balanced_spines, ecmp_spines, routes_for
-
-# Wire-step encoding: global segment index * WIRE_SEG + step-within-segment.
-# Monotone across segments; comparable across flows inside a segment.
-WIRE_SEG = 4096
-I32MAX = np.iinfo(np.int32).max
-BIG = jnp.int32(2**30)
+from ..symphony import SymphonyParams
+from .stages import (BIG, I32MAX, WIRE_SEG, EngineState, WLArrays,  # noqa: F401
+                     engine_tick, init_state, make_ctx, resolve_share_policy)
+from .topology import LEVEL_SPINE, LEVEL_TOR, Topology
+from .workload import (Workload, balanced_choice, ecmp_choice, path_table_for,
+                       routes_for)
 
 
 class SimParams(NamedTuple):
@@ -66,8 +74,10 @@ class SimParams(NamedTuple):
     sym: SymphonyParams = SymphonyParams()
     sym_win_ticks: int = 10        # T_win = 100 us
     sym_start_tick: int = 0        # late-start experiments (Fig. 4)
+    deploy: str = "tor"            # Symphony tier: "tor" | "all" | "spine"
     # Alternatives / knobs
     pq_on: bool = False            # strict-priority for lagging flows (Fig. 5)
+    share_policy: str = "proportional"  # "proportional" | "pq" | "wfq"
     per_step_ecmp: bool = True     # re-hash the 5-tuple every step (§4.7: the
                                    # step index lives in the UDP sport, so each
                                    # step is a distinct flow to ECMP)
@@ -87,7 +97,9 @@ class SimResult(NamedTuple):
 
 class Static(NamedTuple):
     """Per-run device arrays (vmap over leading axis for multi-seed)."""
-    routes: jax.Array        # [F, 4] link ids (per-flow / balanced routing)
+    routes: jax.Array        # [F, H] static per-flow paths (null-link padded)
+    path_table: jax.Array    # [F, P, H] ECMP candidate paths per flow
+    n_paths: jax.Array       # [F] candidate fan-out (hash applied modulo)
     cap: jax.Array           # [L+1] bytes/s
     link_dom: jax.Array      # [L+1] Symphony domain (switch) id; D = no Symphony
     dom_pad: jax.Array       # [D+1] zeros; carries the static domain count
@@ -95,65 +107,76 @@ class Static(NamedTuple):
     bg_amp: jax.Array        # [L+1] square-wave background amplitude
     bg_period_ticks: jax.Array  # i32 scalar
     bg_duty: jax.Array          # f32 scalar in [0,1]
-    # per-step ECMP support
-    src_tor: jax.Array       # [F]
-    dst_tor: jax.Array       # [F]
-    hts: jax.Array           # [3] = (n_hosts, n_tors, n_spines)
+    job_weight: jax.Array    # [J] weighted-fair share weights (wfq policy)
     seed: jax.Array          # i32 hash salt
 
 
-def link_domains(topo: Topology) -> np.ndarray:
-    """Map each link to the switch owning its egress port.  Symphony is
-    deployed on ToR switches only (paper §5 "Practical deployment"): ToR
-    egress = access-down links + ToR->spine uplinks. Everything else (host
-    NICs, spine egress) maps to the null domain D = n_tors."""
-    H, T, S = topo.n_hosts, topo.n_tors, topo.n_spines
-    dom = np.full(topo.n_links + 1, T, np.int32)
-    hosts = np.arange(H)
-    dom[topo.acc_down(hosts)] = topo.tor_of(hosts)
-    for t in range(T):
-        dom[topo.uplink(t, np.arange(S))] = t
-    return dom
+def link_domains(topo: Topology, deploy: str = "tor"
+                 ) -> tuple[np.ndarray, int]:
+    """Map each link to its Symphony domain (the switch owning its egress
+    port), honoring the deployment tier:
+
+    * ``"tor"``   — ToR/edge switches only (paper §5 "Practical deployment")
+    * ``"all"``   — every switch tier
+    * ``"spine"`` — spine/aggregation and core switches only
+
+    Returns ``(dom [L+1], D)`` where links of non-deployed switches (and
+    host NICs, and the null link) map to the null domain ``D``.
+    """
+    lv = topo.switch_level
+    if deploy == "tor":
+        sel = lv == LEVEL_TOR
+    elif deploy == "all":
+        sel = lv >= LEVEL_TOR
+    elif deploy == "spine":
+        sel = lv >= LEVEL_SPINE
+    else:
+        raise ValueError(f"unknown deploy tier {deploy!r}")
+    sw_ids = np.nonzero(sel)[0]
+    D = int(sw_ids.shape[0])
+    compact = np.full(topo.n_switches, -1, np.int32)
+    compact[sw_ids] = np.arange(D, dtype=np.int32)
+    dom = np.full(topo.n_links + 1, D, np.int32)
+    owned = topo.link_switch >= 0
+    mapped = compact[topo.link_switch[owned]]
+    dom[:topo.n_links][owned] = np.where(mapped >= 0, mapped, D)
+    return dom, D
 
 
 def build_static(topo: Topology, wl: Workload, routing: str, seed: int,
                  bg_base: np.ndarray | None = None,
                  bg_amp: np.ndarray | None = None,
                  bg_period: float = 1e-3, bg_duty: float = 0.0,
-                 dt: float = 10e-6) -> Static:
+                 dt: float = 10e-6, deploy: str = "tor",
+                 job_weight: np.ndarray | None = None) -> Static:
     if routing == "ecmp":
-        spine = ecmp_spines(topo, wl, seed)
+        choice = ecmp_choice(topo, wl, seed)
     elif routing == "balanced":
-        spine = balanced_spines(topo, wl)
+        choice = balanced_choice(topo, wl)
     else:
         raise ValueError(routing)
-    routes = routes_for(topo, wl, spine)
+    routes = routes_for(topo, wl, choice)
+    paths, n_paths = path_table_for(topo, wl)
+    dom, D = link_domains(topo, deploy)
     zb = np.zeros(topo.n_links + 1)
     return Static(
         routes=jnp.asarray(routes, jnp.int32),
+        path_table=jnp.asarray(paths, jnp.int32),
+        n_paths=jnp.asarray(n_paths, jnp.int32),
         cap=jnp.asarray(np.concatenate([topo.link_cap, [1e30]]), jnp.float32),
-        link_dom=jnp.asarray(link_domains(topo)),
-        dom_pad=jnp.zeros(topo.n_tors + 1, jnp.float32),
+        link_dom=jnp.asarray(dom),
+        dom_pad=jnp.zeros(D + 1, jnp.float32),
         bg_base=jnp.asarray(zb if bg_base is None else np.append(bg_base, 0.0),
                             jnp.float32),
         bg_amp=jnp.asarray(zb if bg_amp is None else np.append(bg_amp, 0.0),
                            jnp.float32),
         bg_period_ticks=jnp.asarray(max(1, round(bg_period / dt)), jnp.int32),
         bg_duty=jnp.asarray(bg_duty, jnp.float32),
-        src_tor=jnp.asarray(topo.tor_of(wl.src), jnp.int32),
-        dst_tor=jnp.asarray(topo.tor_of(wl.dst), jnp.int32),
-        hts=jnp.asarray([topo.n_hosts, topo.n_tors, topo.n_spines], jnp.int32),
+        job_weight=jnp.asarray(
+            np.ones(wl.n_jobs) if job_weight is None else job_weight,
+            jnp.float32),
         seed=jnp.asarray(seed, jnp.int32),
     )
-
-
-class WLArrays(NamedTuple):
-    src: jax.Array; dst: jax.Array; pred: jax.Array; job: jax.Array
-    phase: jax.Array; sps: jax.Array; pass_steps: jax.Array
-    total_steps: jax.Array
-    n_phases: jax.Array; n_segs: jax.Array; chunk_sched: jax.Array
-    gap_ticks: jax.Array; start_ticks: jax.Array
-    step_offset: jax.Array; fstart_ticks: jax.Array
 
 
 def wl_arrays(wl: Workload, dt: float) -> WLArrays:
@@ -173,327 +196,15 @@ def wl_arrays(wl: Workload, dt: float) -> WLArrays:
     )
 
 
-class _State(NamedTuple):
-    # slot level [F]
-    next_step: jax.Array; done_upto: jax.Array; finish: jax.Array
-    # instance level [F, W]
-    step_of: jax.Array; sent: jax.Array
-    rate: jax.Array; target: jax.Array; alpha_cc: jax.Array; stage: jax.Array
-    lam: jax.Array                     # accumulated expected marks this epoch
-    # link level [L+1]
-    q: jax.Array
-    # Symphony per (link, job), flattened [(L+1) * J]
-    s_stepmin: jax.Array; s_psnwin: jax.Array; s_alpha: jax.Array
-    s_cnt: jax.Array; s_cntop: jax.Array
-    # job level [J]
-    seg_idx: jax.Array; seg_ready: jax.Array; job_finish: jax.Array
-    key: jax.Array
-
-
-def _seg_global(c, sps, phase, n_phases):
-    return (c // sps) * n_phases + phase
-
-
-def _wire(c, sps, phase, n_phases):
-    return _seg_global(c, sps, phase, n_phases) * WIRE_SEG + (c % sps)
-
-
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def simulate_core(st: Static, wl: WLArrays, cfg: SimParams,
                   key: jax.Array) -> SimResult:
-    F = int(wl.src.shape[0])
-    J = int(wl.n_phases.shape[0])
-    W = cfg.window
-    L = int(st.cap.shape[0]) - 1
-    FW = F * W
-    D = int(st.dom_pad.shape[-1]) - 1   # null domain id (static)
-    DJ = (D + 1) * J
+    resolve_share_policy(cfg)        # fail fast on unknown policy names
+    ctx = make_ctx(st, wl, cfg.window)
+    state0 = init_state(ctx, key)
 
-    nph_f = wl.n_phases[wl.job]                          # [F]
-    line_rate = st.cap[st.routes[:, 0]]                  # [F] access-link rate
-    fidx = jnp.arange(F)
-    inst_job = jnp.broadcast_to(wl.job[:, None], (F, W)).reshape(FW)
-    inst_flow = jnp.broadcast_to(fidx[:, None], (F, W)).reshape(FW)
-    sps_i = jnp.broadcast_to(wl.sps[:, None], (F, W)).reshape(FW)
-    phase_i = jnp.broadcast_to(wl.phase[:, None], (F, W)).reshape(FW)
-    nph_i = jnp.broadcast_to(nph_f[:, None], (F, W)).reshape(FW)
-    off_i = jnp.broadcast_to(wl.step_offset[:, None], (F, W)).reshape(FW)
-    iroute_static = jnp.broadcast_to(st.routes[:, None, :], (F, W, 4)).reshape(FW, 4)
-    max_seg = int(wl.chunk_sched.shape[1])
-
-    def chunk_of(job_ids, seg):
-        return wl.chunk_sched[job_ids, jnp.clip(seg, 0, max_seg - 1)]
-
-    state0 = _State(
-        next_step=jnp.zeros(F, jnp.int32),
-        done_upto=jnp.zeros(F, jnp.int32),
-        finish=jnp.full(F, I32MAX, jnp.int32),
-        step_of=jnp.full((F, W), -1, jnp.int32),
-        sent=jnp.zeros((F, W), jnp.float32),
-        rate=jnp.zeros((F, W), jnp.float32) + line_rate[:, None],
-        target=jnp.zeros((F, W), jnp.float32) + line_rate[:, None],
-        alpha_cc=jnp.ones((F, W), jnp.float32),
-        stage=jnp.zeros((F, W), jnp.int32),
-        lam=jnp.zeros((F, W), jnp.float32),
-        q=jnp.zeros(L + 1, jnp.float32),
-        s_stepmin=jnp.zeros(DJ, jnp.int32),
-        s_psnwin=jnp.zeros(DJ, jnp.float32),
-        s_alpha=jnp.ones(DJ, jnp.float32),
-        s_cnt=jnp.zeros(DJ, jnp.float32),
-        s_cntop=jnp.zeros(DJ, jnp.float32),
-        seg_idx=jnp.zeros(J, jnp.int32),
-        seg_ready=wl.start_ticks + wl.gap_ticks,
-        job_finish=jnp.full(J, I32MAX, jnp.int32),
-        key=key,
-    )
-
-    def tick_fn(state: _State, tick: jax.Array):
-        # ------------------------------------------------ 1. starts
-        s_next = state.next_step
-        seg_of_next = _seg_global(s_next, wl.sps, wl.phase, nph_f)
-        seg_ok = (seg_of_next == state.seg_idx[wl.job]) & \
-                 (tick >= state.seg_ready[wl.job])
-        # Ring data dependency. Within a collective, send(s) needs only
-        # recv(s-1) == predecessor's *step s-1* send completed (steps carry
-        # independent chunks, so no contiguity requirement).  At a collective
-        # boundary (s % pass_steps == 0) the node needs its previous
-        # collective complete: all own sends and all receives done.
-        boundary = (s_next % wl.pass_steps) == 0
-        w_prev = (s_next - 1) % W
-        ps_prev = state.step_of[wl.pred, w_prev]
-        prev_chunk = chunk_of(
-            wl.job, _seg_global(s_next - 1, wl.sps, wl.phase, nph_f))
-        pred_prev_done = (state.done_upto[wl.pred] >= s_next) | \
-            (ps_prev > s_next - 1) | \
-            ((ps_prev == s_next - 1) &
-             (state.sent[wl.pred, w_prev] >= prev_chunk))
-        pass_done = (state.done_upto >= s_next) & \
-            (state.done_upto[wl.pred] >= s_next)
-        ring_ok = jnp.where(boundary, (s_next == 0) | pass_done, pred_prev_done)
-        ring_ok &= tick >= wl.fstart_ticks
-        w_next = s_next % W
-        slot = state.step_of[fidx, w_next]
-        slot_free = (slot < 0) | (slot < state.done_upto)
-        can = (s_next < wl.total_steps) & seg_ok & ring_ok & slot_free
-
-        def upd(arr, val):
-            return arr.at[fidx, w_next].set(
-                jnp.where(can, val, arr[fidx, w_next]))
-
-        step_of = upd(state.step_of, s_next)
-        sent = upd(state.sent, 0.0)
-        rate = upd(state.rate, line_rate)
-        target = upd(state.target, line_rate)
-        alpha_cc = upd(state.alpha_cc, 1.0)
-        stage = upd(state.stage, 0)
-        lam = upd(state.lam, 0.0)
-        next_step = jnp.where(can, s_next + 1, s_next)
-
-        # ------------------------------------------------ instance view
-        istep = step_of.reshape(FW)
-        isent = sent.reshape(FW)
-        irate = rate.reshape(FW)
-        iseg = _seg_global(istep, sps_i, phase_i, nph_i)
-        ichunk = chunk_of(inst_job, iseg)
-        iwire = _wire(istep, sps_i, phase_i, nph_i) + off_i
-        occupied = istep >= 0
-        retired = occupied & (istep < state.done_upto[inst_flow])
-        complete = occupied & (isent >= ichunk)
-        active = occupied & ~complete & ~retired
-
-        # routes: the step index is part of the 5-tuple (paper §4.7), so each
-        # step re-rolls its ECMP path; otherwise routes are static per flow.
-        if cfg.per_step_ecmp:
-            H, T, S = st.hts[0], st.hts[1], st.hts[2]
-            h = (inst_flow.astype(jnp.uint32) * jnp.uint32(2654435761)
-                 + jnp.maximum(istep, 0).astype(jnp.uint32) * jnp.uint32(40503)
-                 + (st.seed.astype(jnp.uint32) + 1) * jnp.uint32(2246822519))
-            h = (h ^ (h >> 13)) * jnp.uint32(2654435761)
-            h = h ^ (h >> 16)
-            spine = (h % S.astype(jnp.uint32)).astype(jnp.int32)
-            src_t = st.src_tor[inst_flow]
-            dst_t = st.dst_tor[inst_flow]
-            inter = src_t != dst_t
-            null = jnp.int32(L)
-            iroute = jnp.stack([
-                wl.src[inst_flow],
-                jnp.where(inter, 2 * H + src_t * S + spine, null),
-                jnp.where(inter, 2 * H + T * S + spine * T + dst_t, null),
-                H + wl.dst[inst_flow],
-            ], axis=1)
-        else:
-            iroute = iroute_static
-        flat_links = iroute.reshape(-1)                   # [FW*4]
-        idom = st.link_dom[iroute]                        # [FW, 4]
-        djf = (idom * J + inst_job[:, None]).reshape(-1)  # [FW*4]
-
-        # ------------------------------------------------ 2. loads & shares
-        w_rate = jnp.where(active, irate, 0.0)
-        bg_on = (tick % st.bg_period_ticks).astype(jnp.float32) < \
-            st.bg_duty * st.bg_period_ticks.astype(jnp.float32)
-        bg = st.bg_base + jnp.where(bg_on, st.bg_amp, 0.0)
-
-        if cfg.pq_on:
-            # strict priority for the job's oldest active step (Fig. 5 "PQ")
-            job_min_wire = jnp.full(J, BIG).at[inst_job].min(
-                jnp.where(active, iwire, BIG))
-            is_hi = active & (iwire <= job_min_wire[inst_job])
-            hi_rate = jnp.where(is_hi, irate, 0.0)
-            off_hi = jnp.zeros(L + 1).at[flat_links].add(
-                jnp.repeat(hi_rate, 4)) + bg
-            s_hi = jnp.minimum(1.0, st.cap / jnp.maximum(off_hi, 1.0))
-            rem = jnp.maximum(st.cap - off_hi * s_hi, 0.0)
-            lo_rate = jnp.where(active & ~is_hi, irate, 0.0)
-            off_lo = jnp.zeros(L + 1).at[flat_links].add(jnp.repeat(lo_rate, 4))
-            s_lo = rem / jnp.maximum(off_lo, 1.0)
-            share = jnp.where(is_hi[:, None], s_hi[iroute],
-                              jnp.minimum(1.0, s_lo[iroute]))
-            eff_scale = share.min(axis=1)
-            offered = off_hi + off_lo
-        else:
-            offered = jnp.zeros(L + 1).at[flat_links].add(
-                jnp.repeat(w_rate, 4)) + bg
-            s_l = jnp.minimum(1.0, st.cap / jnp.maximum(offered, 1.0))
-            eff_scale = s_l[iroute].min(axis=1)
-        eff = w_rate * eff_scale                          # delivered bytes/s
-
-        # queues + RED
-        q = jnp.maximum(state.q + (offered - st.cap) * cfg.dt, 0.0)
-        q = q.at[L].set(0.0)
-        p_red = jnp.clip((q - cfg.red_kmin) / (cfg.red_kmax - cfg.red_kmin),
-                         0.0, 1.0) * cfg.red_pmax
-
-        # ------------------------------------------------ 3. marking
-        dj = idom * J + inst_job[:, None]                 # [FW, 4]
-        sm = state.s_stepmin[dj]
-        pw = state.s_psnwin[dj]
-        al = state.s_alpha[dj]
-        ipsn = isent / cfg.mtu
-        if cfg.sym_on:
-            p_sym = marking_probability(
-                iwire[:, None], ipsn[:, None], sm, pw, al, cfg.sym)
-            p_sym = jnp.where(idom < D, p_sym, 0.0)
-            p_sym = jnp.where(tick >= cfg.sym_start_tick, p_sym, 0.0)
-        else:
-            p_sym = jnp.zeros_like(pw)
-        p_hop = 1.0 - (1.0 - p_red[iroute]) * (1.0 - p_sym)
-        log_nomark = jnp.sum(jnp.log1p(-jnp.minimum(p_hop, 0.999999)), axis=1)
-        p_inst = 1.0 - jnp.exp(log_nomark)
-        pkts = eff * cfg.dt / cfg.mtu
-        lam = (lam.reshape(FW) +
-               jnp.where(active, p_inst * pkts, 0.0)).reshape(F, W)
-
-        # ------------------------------------------------ 4. progress
-        isent_new = isent + eff * cfg.dt
-        newly_done = active & (isent_new >= ichunk)
-        sent = isent_new.reshape(F, W)
-
-        done_upto = state.done_upto
-        for _ in range(2):  # <=2 completions per slot per tick in practice
-            wsel = done_upto % W
-            ch = chunk_of(wl.job, _seg_global(done_upto, wl.sps, wl.phase, nph_f))
-            ok = (step_of[fidx, wsel] == done_upto) & (sent[fidx, wsel] >= ch)
-            done_upto = done_upto + ok.astype(jnp.int32)
-        finish = jnp.where((done_upto >= wl.total_steps) &
-                           (state.finish == I32MAX), tick, state.finish)
-
-        # ------------------------------------------------ 5. Symphony state
-        # one scatter entry per (instance, hop); hops in the null domain D
-        # land on rows >= D*J and are ignored by marking.
-        act4 = jnp.repeat(active, 4)
-        send4 = jnp.repeat(active & (eff > 1.0), 4)
-        done4 = jnp.repeat(newly_done, 4)
-        wire4 = jnp.repeat(iwire, 4)
-        psn4 = jnp.repeat(ipsn + pkts, 4)
-        pkts4 = jnp.repeat(pkts, 4)
-        sm4 = sm.reshape(-1)
-
-        cnt = state.s_cnt.at[djf].add(jnp.where(act4, pkts4, 0.0))
-        cntop = state.s_cntop.at[djf].add(
-            jnp.where(act4 & (wire4 > sm4), pkts4, 0.0))
-        # optimistic advancement on LAST events, then lazy correction
-        cand = jnp.zeros(DJ, jnp.int32).at[djf].max(
-            jnp.where(done4, wire4 + 1, 0))
-        cand = jnp.maximum(state.s_stepmin, cand)
-        min_act = jnp.full(DJ, BIG).at[djf].min(
-            jnp.where(act4 & ~done4, wire4, BIG))
-        stepmin = jnp.where(min_act < BIG, jnp.minimum(cand, min_act), cand)
-        psnwin = state.s_psnwin.at[djf].max(
-            jnp.where(send4 & ~done4 & (wire4 == stepmin[djf]), psn4, 0.0))
-
-        sym_epoch = (tick % cfg.sym_win_ticks) == (cfg.sym_win_ticks - 1)
-        have = cnt > jnp.float32(cfg.sym.n_sample)
-        exceed = cntop >= jnp.float32(cfg.sym.tau) * cnt
-        alpha_new = jnp.clip(state.s_alpha + jnp.where(exceed, 1.0, -1.0) * have,
-                             1.0, jnp.float32(cfg.sym.alpha_max))
-        s_alpha = jnp.where(sym_epoch, alpha_new, state.s_alpha)
-        s_cnt = jnp.where(sym_epoch, 0.0, cnt)
-        s_cntop = jnp.where(sym_epoch, 0.0, cntop)
-        s_psnwin = jnp.where(sym_epoch, 0.0, psnwin)
-
-        # ------------------------------------------------ 6. DCQCN epoch
-        cc_epoch = (tick % cfg.cc_epoch_ticks) == (cfg.cc_epoch_ticks - 1)
-
-        def cc_update(args):
-            rate, target, alpha_cc, stage, lam, key = args
-            key, sub = jax.random.split(key)
-            u = jax.random.uniform(sub, (F, W))
-            cut = (u < 1.0 - jnp.exp(-lam)) & (step_of >= 0)
-            r_c = jnp.maximum(rate * (1.0 - alpha_cc / 2.0), cfg.cc_min_rate)
-            # DCQCN: the recovery target snapshots the current rate on the
-            # *first* cut of a congestion event only; consecutive cuts
-            # (stage==0) keep the previous target so fast recovery can bounce
-            # back to the pre-congestion operating point.
-            t_c = jnp.where(stage > 0, rate, target)
-            a_c = (1.0 - cfg.cc_g) * alpha_cc + cfg.cc_g
-            a_n = (1.0 - cfg.cc_g) * alpha_cc
-            stage_n = stage + 1
-            tgt_inc = jnp.where(stage_n > cfg.cc_fr_stages,
-                                jnp.where(stage_n > 2 * cfg.cc_fr_stages,
-                                          cfg.cc_rhai, cfg.cc_rai), 0.0)
-            t_n = jnp.minimum(target + tgt_inc, line_rate[:, None])
-            r_n = jnp.minimum((rate + t_n) / 2.0, line_rate[:, None])
-            return (jnp.where(cut, r_c, r_n), jnp.where(cut, t_c, t_n),
-                    jnp.where(cut, a_c, a_n), jnp.where(cut, 0, stage_n),
-                    jnp.zeros_like(lam), key)
-
-        rate, target, alpha_cc, stage, lam, key = jax.lax.cond(
-            cc_epoch, cc_update, lambda a: a,
-            (rate, target, alpha_cc, stage, lam, state.key))
-
-        # ------------------------------------------------ 7. segments / jobs
-        seg_phase = state.seg_idx % wl.n_phases
-        participating = wl.phase == seg_phase[wl.job]
-        c_end = (state.seg_idx[wl.job] // nph_f + 1) * wl.sps
-        flow_done = ((~participating) | (done_upto >= c_end)).astype(jnp.int32)
-        seg_done = jnp.ones(J, jnp.int32).at[wl.job].min(flow_done) > 0
-        adv = seg_done & (state.seg_idx < wl.n_segs) & (tick >= state.seg_ready)
-        seg_idx = state.seg_idx + adv.astype(jnp.int32)
-        new_phase0 = (seg_idx % wl.n_phases) == 0
-        seg_ready = jnp.where(adv,
-                              tick + jnp.where(new_phase0, wl.gap_ticks, 0),
-                              state.seg_ready)
-        job_finish = jnp.where((seg_idx >= wl.n_segs) &
-                               (state.job_finish == I32MAX),
-                               tick, state.job_finish)
-
-        # ------------------------------------------------ metrics
-        min_wire = jnp.full(J, BIG).at[inst_job].min(jnp.where(active, iwire, BIG))
-        max_wire = jnp.full(J, -1).at[inst_job].max(jnp.where(active, iwire, -1))
-        done_min = jnp.full(J, BIG).at[wl.job].min(done_upto)
-        tput = jnp.zeros(J).at[inst_job].add(eff)
-        sample = (min_wire, max_wire, done_min, tput, q[:L].max(), s_alpha.max())
-
-        new_state = _State(
-            next_step=next_step, done_upto=done_upto, finish=finish,
-            step_of=step_of, sent=sent, rate=rate, target=target,
-            alpha_cc=alpha_cc, stage=stage, lam=lam, q=q,
-            s_stepmin=stepmin, s_psnwin=s_psnwin, s_alpha=s_alpha,
-            s_cnt=s_cnt, s_cntop=s_cntop,
-            seg_idx=seg_idx, seg_ready=seg_ready, job_finish=job_finish,
-            key=key,
-        )
-        return new_state, sample
+    def tick_fn(state, tick):
+        return engine_tick(ctx, cfg, state, tick)
 
     R = cfg.record_every
     n_rec = cfg.n_ticks // R
@@ -529,11 +240,13 @@ def simulate(topo: Topology, wl: Workload, cfg: SimParams,
              routing: str = "ecmp", seed: int = 0,
              bg_base: np.ndarray | None = None,
              bg_amp: np.ndarray | None = None,
-             bg_period: float = 1e-3, bg_duty: float = 0.0) -> SimResult:
+             bg_period: float = 1e-3, bg_duty: float = 0.0,
+             job_weight: np.ndarray | None = None) -> SimResult:
     """Single-run entry point."""
     cfg, mode = _resolve_routing(cfg, routing)
     st = build_static(topo, wl, mode, seed, bg_base, bg_amp, bg_period,
-                      bg_duty, cfg.dt)
+                      bg_duty, cfg.dt, deploy=cfg.deploy,
+                      job_weight=job_weight)
     return simulate_core(st, wl_arrays(wl, cfg.dt), cfg, jax.random.PRNGKey(seed))
 
 
@@ -541,7 +254,8 @@ def simulate_seeds(topo: Topology, wl: Workload, cfg: SimParams,
                    routing: str, seeds: list[int], **bg) -> SimResult:
     """vmap over seeds: both the ECMP path draw and the DCQCN coin flips vary."""
     cfg, mode = _resolve_routing(cfg, routing)
-    statics = [build_static(topo, wl, mode, s, dt=cfg.dt, **bg) for s in seeds]
+    statics = [build_static(topo, wl, mode, s, dt=cfg.dt, deploy=cfg.deploy,
+                            **bg) for s in seeds]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *statics)
     keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
     wla = wl_arrays(wl, cfg.dt)

@@ -23,6 +23,12 @@ Model (paper §2.1-2.2):
 2-D ring collectives (§4.6) are expressed with two *phases* per pass: each
 node has a dim-0 flow slot (phase 0) and a dim-1 slot (phase 1); a job-wide
 barrier separates the phases.
+
+The phase machinery generalizes beyond rings: recursive halving-doubling
+allreduce is 2*log2(N) single-step phases with geometrically shrinking
+chunks (:meth:`WorkloadBuilder.add_halving_doubling_job`), and hierarchical
+allreduce is 3 phases — intra-group ring reduce-scatter, inter-group leader
+ring, intra-group ring allgather (:meth:`WorkloadBuilder.add_hierarchical_job`).
 """
 from __future__ import annotations
 
@@ -96,6 +102,11 @@ def _ring_slots(hosts: np.ndarray, ring_size: int, job_id: int, phase: int,
 
 class WorkloadBuilder:
     def __init__(self, max_segments: int | None = None):
+        """``max_segments`` fixes the width of the chunk schedule: jobs with
+        fewer segments are padded (repeating the last chunk); jobs with more
+        raise at :meth:`build`.  Useful to keep array shapes — and therefore
+        jit caches — stable across workloads."""
+        self.max_segments = max_segments
         self._flows: dict[str, list] = {
             k: [] for k in ("src", "dst", "pred", "job", "phase", "sps", "ps",
                             "off", "fstart")}
@@ -220,9 +231,113 @@ class WorkloadBuilder:
         self._jobs["chunks"].append([float(chunk_bytes)])
         return job_id
 
+    def _add_phase_slots(self, s, d, p, ph, sps, job_id):
+        self._flows["src"] += list(s)
+        self._flows["dst"] += list(d)
+        self._flows["pred"] += list(p)
+        self._flows["job"] += [job_id] * len(s)
+        self._flows["phase"] += list(ph)
+        self._flows["sps"] += list(sps)
+        self._flows["ps"] += list(sps)   # one collective per segment
+
+    def add_halving_doubling_job(
+        self,
+        hosts: np.ndarray | list[int],
+        chunk_bytes: float = 8e6,
+        passes: int = 1,
+        compute_gap: float = 0.0,
+        start_time: float = 0.0,
+    ) -> int:
+        """Recursive halving-doubling allreduce (Swing/Rabenseifner style).
+
+        ``chunk_bytes`` is the *total* reduced volume V.  The collective runs
+        2*log2(N) barrier-separated phases: reduce-scatter exchanges of
+        V/2, V/4, .., V/N with partners at distance 1, 2, .., N/2, then the
+        mirrored allgather doubling back up.  Each phase is one step per
+        node, so each (node, phase) is its own self-gated flow slot.
+        """
+        hosts = np.asarray(hosts, np.int32)
+        n = len(hosts)
+        m = int(np.log2(n))
+        assert 2 ** m == n, f"halving-doubling needs power-of-2 hosts, got {n}"
+        self._pad_flow_defaults()
+        job_id = len(self._jobs["n_passes"])
+        n_phases = 2 * m
+        for q in range(n_phases):
+            dist = 1 << (q if q < m else 2 * m - 1 - q)
+            base = len(self._flows["src"])
+            s = list(hosts)
+            d = [int(hosts[i ^ dist]) for i in range(n)]
+            p = [base + i for i in range(n)]       # self-gated, 1 step
+            self._add_phase_slots(s, d, p, [q] * n, [1] * n, job_id)
+        seg_chunks = [float(chunk_bytes) / 2 ** (min(q, n_phases - 1 - q) + 1)
+                      for _ in range(passes) for q in range(n_phases)]
+        self._jobs["n_phases"].append(n_phases)
+        self._jobs["n_passes"].append(passes)
+        self._jobs["gap"].append(float(compute_gap))
+        self._jobs["start"].append(float(start_time))
+        self._jobs["chunks"].append(seg_chunks)
+        return job_id
+
+    def add_hierarchical_job(
+        self,
+        hosts: np.ndarray | list[int],
+        group_size: int,
+        chunk_bytes: float = 8e6,
+        passes: int = 1,
+        compute_gap: float = 0.0,
+        start_time: float = 0.0,
+    ) -> int:
+        """Hierarchical allreduce: intra-group ring reduce-scatter (phase 0),
+        inter-group ring allreduce over group leaders (phase 1), intra-group
+        ring allgather (phase 2).  Groups are contiguous runs of
+        ``group_size`` hosts, which maps onto ToR locality when hosts are
+        numbered contiguously per ToR (topology convention)."""
+        hosts = np.asarray(hosts, np.int32)
+        n, g = len(hosts), int(group_size)
+        assert n % g == 0 and n // g >= 2, (n, g)
+        n_groups = n // g
+        self._pad_flow_defaults()
+        job_id = len(self._jobs["n_passes"])
+        groups = [hosts[i * g:(i + 1) * g] for i in range(n_groups)]
+        for phase, sps in ((0, g - 1), (2, g - 1)):
+            if g == 1:
+                continue
+            for mem in groups:
+                base = len(self._flows["src"])
+                s, d, p, _ = _ring_slots(mem, g, job_id, phase, base)
+                self._add_phase_slots(s, d, p, [phase] * len(s),
+                                      [sps] * len(s), job_id)
+        base = len(self._flows["src"])
+        leader_phase = 1 if g > 1 else 0
+        leaders = np.asarray([mem[0] for mem in groups], np.int32)
+        s, d, p, _ = _ring_slots(leaders, n_groups, job_id, leader_phase, base)
+        self._add_phase_slots(s, d, p, [leader_phase] * len(s),
+                              [2 * (n_groups - 1)] * len(s), job_id)
+        n_phases = 3 if g > 1 else 1
+        # per-phase exchanged volume: ring RS/AG move V/g per step inside a
+        # group; the leader ring reduces each group's shard of V.
+        per_phase = ([float(chunk_bytes) / g,
+                      float(chunk_bytes) / (g * n_groups),
+                      float(chunk_bytes) / g] if g > 1
+                     else [float(chunk_bytes) / n_groups])
+        seg_chunks = [c for _ in range(passes) for c in per_phase]
+        self._jobs["n_phases"].append(n_phases)
+        self._jobs["n_passes"].append(passes)
+        self._jobs["gap"].append(float(compute_gap))
+        self._jobs["start"].append(float(start_time))
+        self._jobs["chunks"].append(seg_chunks)
+        return job_id
+
     def build(self) -> Workload:
         self._pad_flow_defaults()
         max_seg = max(len(c) for c in self._jobs["chunks"])
+        if self.max_segments is not None:
+            if max_seg > self.max_segments:
+                raise ValueError(
+                    f"job needs {max_seg} segments > max_segments="
+                    f"{self.max_segments}")
+            max_seg = self.max_segments
         J = len(self._jobs["n_passes"])
         sched = np.zeros((J, max_seg), np.float64)
         for j, c in enumerate(self._jobs["chunks"]):
@@ -247,38 +362,40 @@ class WorkloadBuilder:
         )
 
 
-def routes_for(topo: Topology, wl: Workload, spine: np.ndarray) -> np.ndarray:
-    """[F, 4] link ids (null-link = topo.n_links for unused hops) given a
-    per-flow spine choice."""
-    F = wl.n_flows
-    null = topo.n_links
-    routes = np.full((F, 4), null, np.int64)
-    st, dt = topo.tor_of(wl.src), topo.tor_of(wl.dst)
-    routes[:, 0] = topo.acc_up(wl.src)
-    routes[:, 3] = topo.acc_down(wl.dst)
-    inter = st != dt
-    routes[inter, 1] = topo.uplink(st[inter], spine[inter])
-    routes[inter, 2] = topo.downlink(spine[inter], dt[inter])
-    return routes
+def path_table_for(topo: Topology, wl: Workload
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-flow ECMP candidate paths: ``(paths [F, P, H], n_paths [F])``."""
+    return topo.candidate_paths(wl.src, wl.dst)
 
 
-def ecmp_spines(topo: Topology, wl: Workload, seed: int) -> np.ndarray:
-    """Per-flow 5-tuple-hash spine selection (persistent across steps)."""
+def routes_for(topo: Topology, wl: Workload, choice: np.ndarray) -> np.ndarray:
+    """[F, H] link ids (null-link = topo.n_links for unused hops) given a
+    per-flow candidate-path choice (applied modulo each flow's fan-out)."""
+    paths, n_paths = path_table_for(topo, wl)
+    return paths[np.arange(wl.n_flows), np.asarray(choice) % n_paths]
+
+
+def ecmp_choice(topo: Topology, wl: Workload, seed: int) -> np.ndarray:
+    """Per-flow 5-tuple-hash path selection (persistent across steps)."""
+    paths, _ = path_table_for(topo, wl)
     rng = np.random.default_rng(seed)
-    return rng.integers(0, topo.n_spines, wl.n_flows).astype(np.int64)
+    return rng.integers(0, paths.shape[1], wl.n_flows).astype(np.int64)
 
 
-def balanced_spines(topo: Topology, wl: Workload) -> np.ndarray:
-    """Static balanced routing: round-robin spines per source ToR (the paper's
-    controlled 'static balanced' scenarios in Fig. 2)."""
-    st, dt = topo.tor_of(wl.src), topo.tor_of(wl.dst)
-    spine = np.zeros(wl.n_flows, np.int64)
+def balanced_choice(topo: Topology, wl: Workload) -> np.ndarray:
+    """Static balanced routing: round-robin over each source edge switch's
+    candidate paths (the paper's controlled 'static balanced' scenarios,
+    Fig. 2).  Flows with a single path (intra-ToR) are skipped."""
+    _, n_paths = path_table_for(topo, wl)
+    st = topo.tor_of(wl.src)
+    choice = np.zeros(wl.n_flows, np.int64)
     counters: dict[int, int] = {}
     for f in range(wl.n_flows):
-        if st[f] == dt[f]:
-            continue  # intra-ToR flows never touch the fabric
+        if n_paths[f] <= 1:
+            continue  # single-path flows never touch the fabric
         t = int(st[f])
         c = counters.get(t, 0)
-        spine[f] = c % topo.n_spines
+        choice[f] = c % n_paths[f]
         counters[t] = c + 1
-    return spine
+    return choice
+

@@ -182,8 +182,9 @@ def moe_block(p: dict, x: jax.Array, cfg: ModelConfig, rules=None, mesh=None
                                  wo_loc, cfg, ep=ep, has_a2a=ep > 1)
             return y.reshape(bl, sl, d), jax.lax.pmean(aux, manual)
 
-        fn = jax.shard_map(
-            local, mesh=mesh, check_vma=False,
+        from ..compat import shard_map
+        fn = shard_map(
+            local, mesh=mesh,
             in_specs=(P(batch_ax if batch_ax else None, seq_ax, None), P(),
                       P("model"), P("model")),
             out_specs=(P(batch_ax if batch_ax else None, seq_ax, None), P()))

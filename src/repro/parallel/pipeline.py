@@ -78,7 +78,8 @@ def run_pipelined(mesh: Mesh, layer_fn: Callable, stage_params, x,
     is split over `axis`; x is replicated."""
     n = mesh.shape[axis]
     fn = pipeline_apply(layer_fn, n, microbatches, axis)
-    sm = jax.shard_map(
-        fn, mesh=mesh, check_vma=False,
+    from ..compat import shard_map
+    sm = shard_map(
+        fn, mesh=mesh,
         in_specs=(P(axis), P()), out_specs=P())
     return sm(stage_params, x)

@@ -106,11 +106,8 @@ def sharding_for(axes: Sequence[str | None],
 def _manual_axes() -> set[str]:
     """Mesh axes that are Manual in the current trace (inside shard_map):
     with_sharding_constraint may not reference them."""
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or not am.axis_names:
-        return set()
-    return {n for n, t in zip(am.axis_names, am.axis_types)
-            if "Manual" in str(t)}
+    from ..compat import manual_axes
+    return manual_axes()
 
 
 def constrain(x: jax.Array, axes: Sequence[str | None],

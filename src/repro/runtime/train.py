@@ -81,8 +81,9 @@ def make_train_step(model, cfg: ModelConfig, tcfg: TrainConfig,
     batch_spec = {"tokens": P(data_axes, None), "labels": P(data_axes, None)}
 
     def wrapped(params, opt, batch):
-        fn = jax.shard_map(
-            manual_step, mesh=mesh, check_vma=False,
+        from ..compat import shard_map
+        fn = shard_map(
+            manual_step, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), params),
                       jax.tree.map(lambda _: P(), opt),
                       batch_spec),

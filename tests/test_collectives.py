@@ -14,13 +14,14 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 from repro.collectives.ring import (ring_all_gather, ring_all_reduce,
                                     ring_reduce_scatter,
                                     hierarchical_all_reduce)
 from repro.collectives.scheduler import sync_grads_local
+from repro.compat import make_mesh as _mesh, shard_map
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = _mesh((8,), ("data",))
 key = jax.random.PRNGKey(0)
 
 # sweep shapes x dtypes x variants; the ring sums the 8 local shards, so the
@@ -32,27 +33,27 @@ for shape in [(8, 16), (16, 7, 3), (64,)]:
             x.astype(jnp.float32).reshape((8, shape[0] // 8) + shape[1:])
             .sum(0))
         for kw in [{}, {"channels": 2}, {"bidirectional": True}]:
-            f = jax.jit(jax.shard_map(
+            f = jax.jit(shard_map(
                 lambda v: ring_all_reduce(v.astype(jnp.float32), "data", **kw),
-                mesh=mesh, check_vma=False, in_specs=P("data"), out_specs=P()))
+                mesh=mesh, in_specs=P("data"), out_specs=P()))
             got = np.asarray(f(x))
             np.testing.assert_allclose(got, want, rtol=2e-2, atol=1e-2)
 print("all_reduce sweep OK")
 
 # reduce-scatter + all-gather round trip == all-reduce
 x = jax.random.normal(key, (8, 32), jnp.float32)
-f = jax.jit(jax.shard_map(
+f = jax.jit(shard_map(
     lambda v: ring_all_gather(ring_reduce_scatter(v, "data"), "data"),
-    mesh=mesh, check_vma=False, in_specs=P(), out_specs=P()))
+    mesh=mesh, in_specs=P(), out_specs=P()))
 np.testing.assert_allclose(np.asarray(f(x))[:8], 8 * np.asarray(x), rtol=1e-5)
 print("rs+ag OK")
 
 # hierarchical == flat on a 2x4 mesh
-mesh2 = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+mesh2 = _mesh((2, 4), ("pod", "data"))
 x2 = jax.random.normal(key, (8, 40), jnp.float32)
-f = jax.jit(jax.shard_map(
+f = jax.jit(shard_map(
     lambda v: hierarchical_all_reduce(v, "data", "pod"),
-    mesh=mesh2, check_vma=False, in_specs=P(("pod", "data")), out_specs=P()))
+    mesh=mesh2, in_specs=P(("pod", "data")), out_specs=P()))
 np.testing.assert_allclose(np.asarray(f(x2))[0], np.asarray(x2.sum(0)),
                            rtol=1e-4, atol=1e-4)
 print("hierarchical OK")
@@ -61,10 +62,10 @@ print("hierarchical OK")
 grads = {"a": jax.random.normal(key, (8, 6, 5)),
          "b": {"c": jax.random.normal(jax.random.PRNGKey(1), (8, 33))}}
 for mode in ["ring", "hierarchical", "psum"]:
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         lambda g: sync_grads_local(g, ("pod", "data"), mode=mode,
                                    bucket_bytes=64),
-        mesh=mesh2, check_vma=False,
+        mesh=mesh2,
         in_specs=({"a": P(("pod", "data")), "b": {"c": P(("pod", "data"))}},),
         out_specs={"a": P(("pod", "data")), "b": {"c": P(("pod", "data"))}}))
     got = f(grads)
@@ -75,8 +76,8 @@ for mode in ["ring", "hierarchical", "psum"]:
 print("sync_grads", "OK")
 
 # HLO of ring all-reduce shows the 2(N-1) collective-permute step chain
-lw = jax.jit(jax.shard_map(lambda v: ring_all_reduce(v, "data"),
-                           mesh=mesh, check_vma=False, in_specs=P("data"),
+lw = jax.jit(shard_map(lambda v: ring_all_reduce(v, "data"),
+                           mesh=mesh, in_specs=P("data"),
                            out_specs=P())).lower(x)
 txt = lw.compile().as_text()
 import re

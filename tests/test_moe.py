@@ -72,7 +72,7 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.config import ModelConfig, MoEConfig
 from repro.models.moe import moe_block, moe_spec
 from repro.models.params import init_tree
@@ -89,8 +89,7 @@ x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32), jnp.float32)
 
 y1, _ = moe_block(params, x, cfg)                       # 1-device path
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 rules = make_rules()
 y8, _ = jax.jit(lambda p, v: moe_block(p, v, cfg, rules, mesh))(params, x)
 np.testing.assert_allclose(np.asarray(y1), np.asarray(y8), atol=1e-4,

@@ -1,10 +1,16 @@
-"""Unit + property tests for the Symphony state machine (paper Alg. 1)."""
-import hypothesis.strategies as st
+"""Unit + property tests for the Symphony state machine (paper Alg. 1).
+
+The property tests need ``hypothesis`` (optional dev dependency, see
+pyproject.toml); without it the whole module is skipped at collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.symphony import (Packet, SymphonyParams, SymphonyState,
                                  init_state, marking_probability,
