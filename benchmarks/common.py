@@ -13,38 +13,67 @@ both consume it::
     from benchmarks.common import build_scenario
     topo, wl, cfg, routing = build_scenario("table1_ring", passes=4)
 
-Register new scenarios with the :func:`scenario` decorator.
+Register new scenarios with the :func:`scenario` decorator.  Scenarios may
+also declare **sweep axes** (named RuntimeKnobs dimensions such as ``tau``,
+``k``, ``t_win_ticks``); ``run_scenario_grid`` crosses them and dispatches
+the whole grid through ``simulate_grid`` — one compile for the entire
+sweep, vmapped over knob points x seeds.
 """
 from __future__ import annotations
 
+import hashlib
+import itertools
 import json
 import os
 import time
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.netsim import (SimParams, Topology, Workload, WorkloadBuilder,
-                               make_fat_tree, make_leaf_spine, metrics,
-                               scale_for_hosts, simulate, simulate_seeds)
+                               grid_from_params, make_fat_tree,
+                               make_leaf_spine, metrics, scale_for_hosts,
+                               simulate, simulate_grid, simulate_seeds)
 from repro.core.netsim.topology import DEFAULT_LINK_BPS as LINK_BPS
 
 CACHE = Path(__file__).resolve().parent / ".cache.json"
 QUICK = os.environ.get("BENCH_QUICK", "0") != "0"
 
+# Bumped whenever the cache key scheme or result layout changes; older
+# cache files are discarded wholesale instead of serving stale entries.
+CACHE_SCHEMA = 2
 
-def cached(name: str, fn):
-    cache = json.loads(CACHE.read_text()) if CACHE.exists() else {}
-    key = f"{name}{'::quick' if QUICK else ''}"
+
+def _config_hash(config) -> str:
+    blob = json.dumps(config, sort_keys=True, default=repr)
+    return hashlib.sha1(blob.encode()).hexdigest()[:10]
+
+
+def cached(name: str, fn, config=None):
+    """Memoize a benchmark result in ``.cache.json``.
+
+    The key folds in a hash of ``config`` — the overrides/sweep values the
+    run depends on — so re-running a scenario with different parameters
+    (or after a registry change, if the caller passes its build config)
+    misses the cache instead of silently returning stale JSON.
+    """
+    cache = {}
+    if CACHE.exists():
+        data = json.loads(CACHE.read_text())
+        if data.get("__schema__") == CACHE_SCHEMA:
+            cache = data
+    key = f"{name}{'@' + _config_hash(config) if config is not None else ''}" \
+          f"{'::quick' if QUICK else ''}"
     if key in cache:
         return cache[key]
     t0 = time.time()
     out = fn()
     out["_wall_s"] = round(time.time() - t0, 1)
     cache[key] = out
+    cache["__schema__"] = CACHE_SCHEMA
     CACHE.write_text(json.dumps(cache, indent=1))
     return out
 
@@ -58,22 +87,112 @@ class Built(NamedTuple):
     routing: str = "ecmp"
 
 
+# Named knob axes: how a sweep value lands in SimParams.  Every applier
+# touches only RuntimeKnobs fields, so any cross-product of these axes
+# stays a single compiled program under ``simulate_grid``.
+KNOB_APPLIERS: dict[str, Callable[[SimParams, object], SimParams]] = {
+    "sym": lambda c, v: c._replace(sym_on=bool(v)),
+    "pq": lambda c, v: c._replace(pq_on=bool(v)),
+    "tau": lambda c, v: c._replace(sym=c.sym._replace(tau=v)),
+    "k": lambda c, v: c._replace(sym=c.sym._replace(k=v)),
+    "alpha_max": lambda c, v: c._replace(sym=c.sym._replace(alpha_max=v)),
+    "t_win_ticks": lambda c, v: c._replace(sym_win_ticks=int(v)),
+    "sym_start_tick": lambda c, v: c._replace(sym_start_tick=int(v)),
+    "red_pmax": lambda c, v: c._replace(red_pmax=v),
+    "red_kmin": lambda c, v: c._replace(red_kmin=v),
+    "red_kmax": lambda c, v: c._replace(red_kmax=v),
+    "cc_rai": lambda c, v: c._replace(cc_rai=v),
+    "cc_g": lambda c, v: c._replace(cc_g=v),
+}
+
+
+@dataclass(frozen=True)
+class SweepAxis:
+    """A declarative sweep dimension: a knob-axis name + default values."""
+    knob: str                 # key into KNOB_APPLIERS
+    values: tuple             # default grid values (full mode)
+    quick: tuple | None = None  # reduced values under BENCH_QUICK
+
+    def points(self) -> tuple:
+        return self.quick if (QUICK and self.quick is not None) else self.values
+
+
 @dataclass(frozen=True)
 class Scenario:
     name: str
     description: str
     build: Callable[..., Built]
+    sweeps: tuple[SweepAxis, ...] = ()
 
 
 SCENARIOS: dict[str, Scenario] = {}
 
 
-def scenario(name: str, description: str = ""):
-    """Register a scenario builder under ``name``."""
+def scenario(name: str, description: str = "",
+             sweeps: Sequence[SweepAxis] = ()):
+    """Register a scenario builder under ``name``, optionally with the
+    declarative knob-sweep axes the paper evaluates it over."""
     def deco(fn):
-        SCENARIOS[name] = Scenario(name, description, fn)
+        SCENARIOS[name] = Scenario(name, description, fn, tuple(sweeps))
         return fn
     return deco
+
+
+def knob_combos(axes: dict[str, Sequence]) -> list[tuple]:
+    """Row-major cross product of the axis values: the single source of
+    truth for how grid point i maps back to axis values (``knob_grid``
+    and any consumer labelling grid results must share this order)."""
+    return list(itertools.product(*axes.values()))
+
+
+def knob_grid(cfg: SimParams, axes: dict[str, Sequence]) -> list[SimParams]:
+    """Cross-product of knob axes applied to a base config; point i
+    corresponds to ``knob_combos(axes)[i]``."""
+    for name in axes:
+        if name not in KNOB_APPLIERS:
+            raise KeyError(
+                f"unknown knob axis {name!r}; have {sorted(KNOB_APPLIERS)}")
+    cfgs = []
+    for combo in knob_combos(axes):
+        c = cfg
+        for name, v in zip(axes, combo):
+            c = KNOB_APPLIERS[name](c, v)
+        cfgs.append(c)
+    return cfgs
+
+
+def sweep_axes_for(name: str) -> dict[str, tuple]:
+    """The registered default sweep axes of a scenario (may be empty)."""
+    return {ax.knob: ax.points() for ax in SCENARIOS[name].sweeps}
+
+
+def run_grid(topo, wl, cfgs: Sequence[SimParams], seeds, routing="ecmp",
+             chunk_knobs: int | None = None, **bg):
+    """Run a knob grid through the one-compile batched executor.
+
+    Returns a SimResult with leading ``[K, S]`` axes, K = len(cfgs).
+    """
+    struct, knobs = grid_from_params(list(cfgs))
+    res = simulate_grid(topo, wl, struct, knobs, seeds, routing=routing,
+                        chunk_knobs=chunk_knobs, **bg)
+    return jax.block_until_ready(res)
+
+
+def run_scenario_grid(name: str, axes: dict[str, Sequence] | None = None,
+                      seeds=(0,), chunk_knobs: int | None = None,
+                      **overrides):
+    """Build a registered scenario and sweep its knob axes in one compile.
+
+    ``axes`` defaults to the scenario's registered sweep axes.  Returns
+    ``(built, cfgs, result)`` where ``cfgs[i]`` describes grid point i and
+    ``result`` carries ``[K, S]`` leading axes.
+    """
+    built = build_scenario(name, **overrides)
+    axes = sweep_axes_for(name) if axes is None else axes
+    cfgs = knob_grid(built.cfg, axes)
+    res = run_grid(built.topo, built.wl, cfgs, seeds, routing=built.routing,
+                   chunk_knobs=chunk_knobs)
+    return built, cfgs, res
 
 
 def build_scenario(name: str, **overrides) -> Built:
@@ -116,19 +235,30 @@ def table1_workload(n_hosts: int = 32, ring: int = 8, chunk: float = 8e6,
 
 
 @scenario("table1_ring",
-          "Paper Table-1: 2-tier leaf-spine, parallel 1-D ring allreduce")
+          "Paper Table-1: 2-tier leaf-spine, parallel 1-D ring allreduce",
+          sweeps=(
+              SweepAxis("sym", (False, True)),
+              SweepAxis("tau", (0.1, 0.25, 0.5), quick=(0.25,)),
+              SweepAxis("k", (1e-3, 1e-2, 1e-1), quick=(1e-2,)),
+          ))
 def _table1_ring(n_hosts: int = 32, ring: int = 8, chunk: float = 8e6,
                  passes: int = 6, barrier: bool = False,
                  compute_gap: float = 0.0, chunk_schedule=None,
-                 horizon_mult: float = 4.0, sym: bool = False) -> Built:
+                 horizon_mult: float = 4.0, sym: bool = False,
+                 share_policy: str = "proportional") -> Built:
     topo = table1_topo(n_hosts)
     wl = table1_workload(n_hosts, ring, chunk, passes, barrier, compute_gap,
                          chunk_schedule)
-    return Built(topo, wl, _horizon_cfg(wl, horizon_mult, sym_on=sym))
+    return Built(topo, wl, _horizon_cfg(wl, horizon_mult, sym_on=sym,
+                                        share_policy=share_policy))
 
 
 @scenario("table1_2d",
-          "Paper §4.6: 2-D ring collective on the Table-1 fabric")
+          "Paper §4.6: 2-D ring collective on the Table-1 fabric",
+          sweeps=(
+              SweepAxis("k", (1e-4, 1e-3, 1e-2, 1e-1),
+                        quick=(1e-3, 1e-2, 1e-1)),
+          ))
 def _table1_2d(n_hosts: int = 32, d0: int = 8, chunk: float = 8e6,
                passes: int = 3, horizon_mult: float = 5.0,
                sym: bool = False) -> Built:

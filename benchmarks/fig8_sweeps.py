@@ -4,21 +4,38 @@
     imbalance;
 (b) throttling gain k: broad sweet spot 1e-3..1e-2, degradation at extremes;
 (c) chunk size: gains grow with chunk >= 512 kB, vanish at 128 kB.
+
+All sweeps dispatch through ``simulate_grid``: every (sym on/off, knob
+value) pair of a panel shares one compiled program, vmapped over knob
+points x seeds.  Panel (b) — the pure-knob sweep — is a single grid call;
+(a) varies the background-load arrays and (c) the horizon, so those loop
+per point but still reuse one engine compilation per structure.
 """
 import numpy as np
 
 from repro.core.netsim import metrics
 from repro.core.symphony import SymphonyParams
 
-from .common import (QUICK, build_scenario, cached, default_params,
-                     run_seeds, seeds_for, table1_topo, table1_workload)
+from .common import (QUICK, build_scenario, cached, default_params, run_grid,
+                     seeds_for, sweep_axes_for, table1_topo, table1_workload)
+
+# single source of truth for the sweep parameters and the cache key
+CONFIG = dict(hosts=32 if QUICK else 64,
+              passes=3 if QUICK else 4,
+              ratios=(1.1, 1.4, 1.7) if QUICK else (1.1, 1.3, 1.5, 1.7),
+              chunks=(128e3, 512e3, 8e6) if QUICK
+                     else (128e3, 512e3, 2e6, 8e6),
+              n_seeds=len(seeds_for(8, 2)))
 
 
-def _gain(topo, wl, cfg_b, cfg_s, seeds, routing="ecmp", **bg):
-    rb = run_seeds(topo, wl, cfg_b, routing, seeds, **bg)
-    rs = run_seeds(topo, wl, cfg_s, routing, seeds, **bg)
-    jb = np.nanmedian(metrics.cct_seconds(rb, wl, cfg_b)[:, 0])
-    js = np.nanmedian(metrics.cct_seconds(rs, wl, cfg_s)[:, 0])
+def _median_cct(res, wl, cfg):
+    return np.nanmedian(metrics.cct_seconds(res, wl, cfg)[..., 0], axis=-1)
+
+
+def _gain_pair(topo, wl, cfg_b, cfg_s, seeds, routing="ecmp", **bg):
+    """Relative JCT gain of cfg_s over cfg_b, both run in one 2-point grid."""
+    res = run_grid(topo, wl, [cfg_b, cfg_s], seeds, routing, **bg)
+    jb, js = _median_cct(res, wl, cfg_b)
     if not (np.isfinite(jb) and np.isfinite(js)):
         return None
     return round(float(1 - js / jb), 4)
@@ -26,47 +43,57 @@ def _gain(topo, wl, cfg_b, cfg_s, seeds, routing="ecmp", **bg):
 
 def run():
     out = {}
-    seeds = seeds_for(8, 2)
-    hosts = 32 if QUICK else 64
+    seeds = list(range(CONFIG["n_seeds"]))
+    hosts = CONFIG["hosts"]
     topo = table1_topo(hosts)
     ring = 8 if hosts == 32 else 32
-    passes = 3 if QUICK else 4
+    passes = CONFIG["passes"]
     wl = table1_workload(n_hosts=hosts, ring=ring, passes=passes,
                          barrier=False)
     horizon = int((0.12 * passes + 0.6) / 10e-6)
 
-    # (a) load imbalance: background share on one uplink, balanced routing
-    for ratio in ([1.1, 1.4, 1.7] if QUICK else [1.1, 1.3, 1.5, 1.7]):
+    # (a) load imbalance: background share on one uplink, balanced routing.
+    # bg arrays live in Static (not knobs), so each ratio is its own grid
+    # call — but shapes repeat, so the engine compiles once for the panel.
+    for ratio in CONFIG["ratios"]:
         bg = np.zeros(topo.n_links)
         up = topo.uplink(0, 0)
         bg[up] = (ratio - 1.0) * topo.link_cap[up]
-        g = _gain(topo, wl, default_params(horizon),
-                  default_params(horizon, sym=True), seeds,
-                  routing="balanced", bg_base=bg)
+        g = _gain_pair(topo, wl, default_params(horizon),
+                       default_params(horizon, sym=True), seeds,
+                       routing="balanced", bg_base=bg)
         out[f"imbalance_{ratio}"] = {"jct_improvement": g}
 
-    # (b) k sweep on 2-D ring pattern (registry scenario)
+    # (b) k sweep on the 2-D ring pattern: baseline + every k value in ONE
+    # grid call (k and sym_on are RuntimeKnobs), using the registry's
+    # declared sweep axis.
     d0 = 8 if hosts == 32 else 16
     _, wl2, _, _ = build_scenario("table1_2d", n_hosts=hosts, d0=d0,
                                   passes=passes)
     horizon2 = int((0.25 * passes + 0.6) / 10e-6)
-    for k in ([1e-4, 1e-3, 1e-2, 1e-1] if not QUICK else [1e-3, 1e-2, 1e-1]):
-        cfg_s = default_params(horizon2, sym=True)._replace(
-            sym=SymphonyParams(k=k))
-        g = _gain(topo, wl2, default_params(horizon2), cfg_s, seeds)
+    ks = list(sweep_axes_for("table1_2d")["k"])
+    base2 = default_params(horizon2)
+    cfgs = [base2] + [base2._replace(sym_on=True, sym=SymphonyParams(k=k))
+                      for k in ks]
+    res = run_grid(topo, wl2, cfgs, seeds, "ecmp")
+    med = _median_cct(res, wl2, base2)          # [1 + len(ks)]
+    for i, k in enumerate(ks):
+        g = (round(float(1 - med[1 + i] / med[0]), 4)
+             if np.isfinite(med[0]) and np.isfinite(med[1 + i]) else None)
         out[f"k_{k:g}"] = {"jct_improvement": g}
 
-    # (c) chunk-size sweep
-    for chunk in ([128e3, 512e3, 8e6] if QUICK
-                  else [128e3, 512e3, 2e6, 8e6]):
+    # (c) chunk-size sweep: the horizon (n_ticks, static structure) tracks
+    # the chunk, so each chunk compiles once; sym on/off rides in one grid.
+    for chunk in CONFIG["chunks"]:
         wl3 = table1_workload(n_hosts=hosts, ring=ring,
                               passes=passes, chunk=chunk, barrier=False)
         hz = int((0.12 * passes * chunk / 8e6 + 0.4) / 10e-6)
-        g = _gain(topo, wl3, default_params(hz),
-                  default_params(hz, sym=True), seeds)
+        g = _gain_pair(topo, wl3, default_params(hz),
+                       default_params(hz, sym=True), seeds)
         out[f"chunk_{int(chunk/1e3)}kB"] = {"cct_improvement": g}
     return out
 
 
 def bench():
-    return cached("fig8_sweeps", run)
+    return cached("fig8_sweeps", run,
+                  config=CONFIG | {"k_axis": sweep_axes_for("table1_2d")["k"]})

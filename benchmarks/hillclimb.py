@@ -1,4 +1,4 @@
-"""§Perf hillclimbing driver for the three selected cells.
+"""§Perf hillclimbing driver for the selected cells.
 
 Each variant re-lowers the cell with a change and reports the roofline
 terms; results accumulate in hillclimb_results.json and are written up in
@@ -7,6 +7,14 @@ EXPERIMENTS.md §Perf.
   PYTHONPATH=src python -m benchmarks.hillclimb --cell mamba2 --variant ssd_bf16
   PYTHONPATH=src python -m benchmarks.hillclimb --cell nemo15 --variant zero1
   PYTHONPATH=src python -m benchmarks.hillclimb --cell ring  --variant bf16
+
+The ``netsim`` cell hillclimbs Symphony's control knobs (tau x k, T_win)
+over the Table-1 scenario through the batched grid executor: the whole
+candidate grid is ONE compile of the engine (``simulate_grid``), so a
+variant's cost is dominated by device time, not re-tracing.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell netsim --variant tau_k
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell netsim --variant t_win
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
@@ -148,6 +156,41 @@ def measure_ring(dtype="float32", mode="ring", channels=4):
         flags.set_ring_sync_dtype("float32")
 
 
+def measure_netsim_grid(axes: dict, seeds=4):
+    """Hillclimb Symphony knobs on the Table-1 scenario via simulate_grid.
+
+    Returns the best grid point by median CCT plus the grid's wall time
+    and engine compile count (must be 1: the grid is a single program).
+    """
+    import numpy as np
+    from benchmarks.common import (build_scenario, knob_combos, knob_grid,
+                                   run_grid)
+    from repro.core.netsim import core_trace_count, metrics
+
+    topo, wl, base, routing = build_scenario("table1_ring", passes=2)
+    cfgs = knob_grid(base._replace(sym_on=True), axes)
+    c0 = core_trace_count()
+    t0 = time.time()
+    res = run_grid(topo, wl, cfgs, list(range(seeds)), routing)
+    wall = time.time() - t0
+    compiles = core_trace_count() - c0
+    cct = metrics.cct_seconds(res, wl, base)[..., 0]      # [K, S]
+    med = np.nanmedian(cct, axis=1)
+    order = np.argsort(np.where(np.isfinite(med), med, np.inf))
+    best = int(order[0])
+    axis_names = list(axes)
+    combos = knob_combos(axes)    # same row-major order as knob_grid
+    return {
+        "grid_points": len(cfgs), "seeds": seeds,
+        "grid_wall_s": round(wall, 1), "engine_compiles": compiles,
+        "best": dict(zip(axis_names, combos[best])) |
+                {"cct_median_s": round(float(med[best]), 4)},
+        "cct_median_by_point": {
+            "/".join(f"{v:g}" for v in combos[i]): round(float(med[i]), 4)
+            for i in order[:8] if np.isfinite(med[i])},
+    }
+
+
 VARIANTS = {
     ("mamba2", "baseline"): lambda: measure_cell("mamba2_130m", "train_4k"),
     ("mamba2", "ssd_bf16"): lambda: measure_cell(
@@ -161,6 +204,12 @@ VARIANTS = {
     ("ring", "bf16"): lambda: measure_ring("bfloat16"),
     ("ring", "psum"): lambda: measure_ring("float32", mode="xla"),
     ("ring", "bf16_c8"): lambda: measure_ring("bfloat16", channels=8),
+    ("netsim", "tau_k"): lambda: measure_netsim_grid(
+        {"tau": (0.1, 0.2, 0.25, 0.4, 0.5), "k": (1e-3, 3e-3, 1e-2, 3e-2)}),
+    ("netsim", "t_win"): lambda: measure_netsim_grid(
+        {"t_win_ticks": (5, 10, 20, 40), "k": (3e-3, 1e-2)}),
+    ("netsim", "red"): lambda: measure_netsim_grid(
+        {"red_pmax": (0.1, 0.2, 0.4), "red_kmin": (25e3, 50e3, 75e3)}),
 }
 
 

@@ -1,17 +1,75 @@
-"""Simulator performance benchmark: ticks/second for the Table-1 scenario
-(single run and vmapped over seeds) — the §Perf record for the netsim layer."""
+"""Simulator performance benchmark — the §Perf record for the netsim layer.
+
+Measures, on the Table-1 scenario:
+
+* single-run / multi-seed ticks-per-second (as before);
+* **grid dispatch**: a Fig.-8-style 16-point knob grid (tau x k, Symphony
+  on) through ``simulate_grid`` — one compile, vmapped — versus *per-point
+  dispatch*, where every grid point pays its own trace+compile the way the
+  pre-split engine (all of SimParams in ``static_argnames``) did.  Both
+  end-to-end wall clock and the compile-only ratio are reported: the
+  split converts O(grid) trace+compiles into O(1), so
+  ``compile_speedup_vs_per_point`` scales with grid size (>= 5x from ~8
+  points up).  End-to-end speedup additionally depends on how well the
+  host vectorizes the batched lanes (on a 1-2 core CPU the batched and
+  sequential executions run at similar throughput; on parallel backends
+  the grid wins on both axes);
+* **compile count**: ``core_trace_count()`` across the grid must be
+  exactly 1 — the CI smoke job asserts this, so an accidental re-trace in
+  the grid executor fails the build.
+
+Under BENCH_QUICK the per-point reference is sampled on a subset of the
+grid and extrapolated (compiles dominate it, so this is conservative).
+"""
+import functools
 import time
 
 import jax
 
-from repro.core.netsim import simulate, simulate_seeds
+from repro.core.netsim import (core_trace_count, grid_from_params, simulate,
+                               simulate_grid, simulate_seeds)
+from repro.core.netsim.simulator import (_core_impl, _resolve_routing,
+                                         build_static, wl_arrays)
 
-from .common import build_scenario, cached, default_params
+from .common import QUICK, build_scenario, cached, default_params, knob_grid
+
+# single source of truth for the benchmark parameters and the cache key
+CONFIG = dict(n_ticks=2_000 if QUICK else 30_000,
+              taus=(0.1, 0.2, 0.25, 0.5), ks=(1e-3, 3e-3, 1e-2, 3e-2),
+              n_seeds=4 if QUICK else 8,
+              grid_seeds=1 if QUICK else 2)
+
+
+def _per_point_reference(topo, wl, cfgs, seed=0):
+    """Legacy dispatch: a fresh jit per grid point, as when every SimParams
+    field was a static argument — each point re-traces and re-compiles.
+
+    Returns (total_wall_s, total_compile_s): the compile term is measured
+    separately via AOT lower+compile of the same fresh program.
+    """
+    wall = comp = 0.0
+    for cfg in cfgs:
+        cfg_r, mode = _resolve_routing(cfg, "ecmp")
+        st = build_static(topo, wl, mode, seed, dt=cfg_r.dt,
+                          deploy=cfg_r.deploy)
+        struct, knobs = cfg_r.split()
+        wla = wl_arrays(wl, struct.dt)
+        key = jax.random.PRNGKey(seed)
+        fresh = jax.jit(functools.partial(_core_impl),
+                        static_argnames=("struct",))
+        t0 = time.time()
+        compiled = fresh.lower(st, wla, struct=struct, knobs=knobs,
+                               key=key).compile()
+        comp += time.time() - t0
+        t0 = time.time()
+        jax.block_until_ready(compiled(st, wla, knobs=knobs, key=key))
+        wall += time.time() - t0
+    return wall + comp, comp
 
 
 def run():
     topo, wl, _, _ = build_scenario("table1_ring", passes=2)
-    n_ticks = 30_000
+    n_ticks = CONFIG["n_ticks"]
     cfg = default_params(n_ticks, sym=True)
 
     t0 = time.time()
@@ -21,19 +79,63 @@ def run():
     jax.block_until_ready(simulate(topo, wl, cfg, "ecmp", 1))
     warm = time.time() - t0
 
-    seeds = list(range(8))
+    seeds = list(range(CONFIG["n_seeds"]))
     t0 = time.time()
     jax.block_until_ready(simulate_seeds(topo, wl, cfg, "ecmp", seeds))
     batch = time.time() - t0
+
+    # ---- Fig.-8-style knob grid: 16 points (4 tau x 4 k)
+    cfgs = knob_grid(cfg, {"tau": CONFIG["taus"], "k": CONFIG["ks"]})
+    struct, knobs = grid_from_params(cfgs)
+    grid_seeds = list(range(CONFIG["grid_seeds"]))
+    c0 = core_trace_count()
+    t0 = time.time()
+    jax.block_until_ready(
+        simulate_grid(topo, wl, struct, knobs, grid_seeds, routing="ecmp",
+                      chunk_knobs=8))
+    grid_wall = time.time() - t0
+    grid_compiles = core_trace_count() - c0
+    # compile-only cost of the grid program, measured the same way as the
+    # per-point reference: AOT trace+compile of a fresh jit of the body
+    from repro.core.netsim.simulator import (_grid_impl, _stacked_statics)
+    struct_r, mode = _resolve_routing(struct, "ecmp")
+    st_stack, keys = _stacked_statics(topo, wl, mode, grid_seeds, struct_r)
+    kn8 = jax.tree.map(lambda x: x[:8], knobs)
+    fresh_grid = jax.jit(functools.partial(_grid_impl),
+                         static_argnames=("struct",))
+    t0 = time.time()
+    fresh_grid.lower(st_stack, wl_arrays(wl, struct_r.dt), struct=struct_r,
+                     knobs_stack=kn8, keys=keys).compile()
+    grid_compile_s = time.time() - t0
+
+    ref_cfgs = cfgs[:4] if QUICK else cfgs
+    pp_total, pp_comp = _per_point_reference(topo, wl, ref_cfgs)
+    # honest legacy model: seeds were traced even pre-split, so per-point
+    # dispatch pays K compiles but K*S runs
+    scale_k = len(cfgs) / len(ref_cfgs)
+    pp_run = pp_total - pp_comp
+    pp_comp *= scale_k
+    pp_wall = pp_comp + pp_run * scale_k * len(grid_seeds)
     return {
         "compile_plus_run_s": round(cold, 2),
         "single_run_s": round(warm, 2),
         "ticks_per_s_single": round(n_ticks / warm),
-        "vmap8_runs_s": round(batch, 2),
-        "ticks_per_s_vmap8": round(8 * n_ticks / batch),
-        "vmap_speedup": round(8 * warm / batch, 2),
+        "vmap_seeds": len(seeds),
+        "vmap_runs_s": round(batch, 2),
+        "ticks_per_s_vmap": round(len(seeds) * n_ticks / batch),
+        "vmap_speedup": round(len(seeds) * warm / batch, 2),
+        "grid_points": len(cfgs),
+        "grid_seeds": len(grid_seeds),
+        "grid_wall_s": round(grid_wall, 2),
+        "grid_compiles": grid_compiles,
+        "per_point_wall_s": round(pp_wall, 2),
+        "per_point_compile_s": round(pp_comp, 2),
+        "per_point_extrapolated": len(ref_cfgs) != len(cfgs),
+        "grid_speedup_vs_per_point": round(pp_wall / grid_wall, 2),
+        "compile_speedup_vs_per_point": round(
+            pp_comp / max(grid_compile_s, 1e-9), 2),
     }
 
 
 def bench():
-    return cached("netsim_perf", run)
+    return cached("netsim_perf", run, config=CONFIG)

@@ -1,17 +1,22 @@
-from . import metrics, stages, topology, workload
-from .simulator import (SimParams, SimResult, Static, build_static,
-                        link_domains, simulate, simulate_core, simulate_seeds)
+from . import metrics, params, stages, topology, workload
+from .params import (EngineParams, RuntimeKnobs, SimParams, SimStructure,
+                     grid_from_params, merge_params, stack_knobs)
+from .simulator import (SimResult, Static, build_static, core_trace_count,
+                        link_domains, simulate, simulate_core, simulate_grid,
+                        simulate_seeds)
 from .stages import SHARE_POLICIES, EngineCtx, EngineState
 from .topology import (FatTree, LeafSpine, Topology, make_fat_tree,
                        make_leaf_spine, scale_for_hosts)
 from .workload import Workload, WorkloadBuilder
 
 __all__ = [
-    "SimParams", "SimResult", "Static", "simulate", "simulate_core",
-    "simulate_seeds", "build_static", "link_domains",
+    "SimParams", "SimStructure", "RuntimeKnobs", "EngineParams",
+    "grid_from_params", "merge_params", "stack_knobs",
+    "SimResult", "Static", "simulate", "simulate_core", "simulate_seeds",
+    "simulate_grid", "core_trace_count", "build_static", "link_domains",
     "SHARE_POLICIES", "EngineCtx", "EngineState",
     "Topology", "LeafSpine", "FatTree", "make_leaf_spine", "make_fat_tree",
     "scale_for_hosts",
-    "Workload", "WorkloadBuilder", "metrics", "stages", "topology",
+    "Workload", "WorkloadBuilder", "metrics", "params", "stages", "topology",
     "workload",
 ]

@@ -1,0 +1,193 @@
+"""Simulator configuration, split along the jit boundary.
+
+The config layer has three faces:
+
+* :class:`SimStructure` — the *static* part: everything that determines
+  array shapes or trace-time control flow (tick count, window size,
+  sampling period, share-policy name, Symphony deployment tier, routing
+  mode).  Hashable, passed to ``jax.jit`` via ``static_argnames``;
+  changing any field recompiles.
+* :class:`RuntimeKnobs` — the *traced* part: every numeric control knob
+  (RED thresholds, DCQCN constants, Symphony gains, on/off gates) as a
+  pytree of f32/i32 scalar leaves.  Changing values never recompiles,
+  and a stacked ``RuntimeKnobs`` (leading axis ``K``) vmaps a whole
+  parameter grid through one compilation of the engine.
+* :class:`SimParams` — the backwards-compatible facade: the flat
+  NamedTuple every existing caller builds.  :meth:`SimParams.split`
+  produces ``(structure, knobs)``; :func:`merge_params` reassembles an
+  attribute-compatible view (:class:`EngineParams`) for the stage
+  kernels, which read static fields as Python scalars and knob fields
+  as (possibly batched) arrays.
+
+Boolean knobs (``sym_on``, ``pq_on``) become 0/1 gates: the engine
+always traces both sides and selects, so a single compiled program
+serves baseline, PQ, and Symphony points of a grid.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..symphony import SymphonyParams
+
+
+class SimParams(NamedTuple):
+    """Flat simulator config (facade; see module docstring for the split)."""
+    dt: float = 10e-6
+    n_ticks: int = 20_000
+    window: int = 48               # max concurrent steps per slot (W)
+    mtu: float = 1000.0            # bytes per "packet" (psn unit)
+    record_every: int = 20         # metric sampling period (ticks)
+    # RED / ECN (bytes)
+    red_kmin: float = 50e3
+    red_kmax: float = 100e3
+    red_pmax: float = 0.2
+    # DCQCN-style rate control
+    cc_epoch_ticks: int = 5        # 50 us control epoch
+    cc_g: float = 1.0 / 16.0
+    cc_rai: float = 5e6            # additive increase (bytes/s) = 40 Mb/s
+    cc_rhai: float = 25e6          # hyper increase
+    cc_fr_stages: int = 5
+    cc_min_rate: float = 1.25e5    # 1 Mb/s floor (paper §5 "soft limit")
+    # Symphony
+    sym_on: bool = False
+    sym: SymphonyParams = SymphonyParams()
+    sym_win_ticks: int = 10        # T_win = 100 us
+    sym_start_tick: int = 0        # late-start experiments (Fig. 4)
+    deploy: str = "tor"            # Symphony tier: "tor" | "all" | "spine"
+    # Alternatives / knobs
+    pq_on: bool = False            # strict-priority for lagging flows (Fig. 5)
+    share_policy: str = "proportional"  # proportional | pq | wfq | drr
+    per_step_ecmp: bool = True     # re-hash the 5-tuple every step (§4.7: the
+                                   # step index lives in the UDP sport, so each
+                                   # step is a distinct flow to ECMP)
+
+    def structure(self) -> "SimStructure":
+        return SimStructure(
+            dt=self.dt, n_ticks=self.n_ticks, window=self.window,
+            mtu=self.mtu, record_every=self.record_every,
+            share_policy=self.share_policy, deploy=self.deploy,
+            per_step_ecmp=self.per_step_ecmp)
+
+    def knobs(self) -> "RuntimeKnobs":
+        f32 = lambda v: jnp.asarray(v, jnp.float32)
+        i32 = lambda v: jnp.asarray(v, jnp.int32)
+        return RuntimeKnobs(
+            red_kmin=f32(self.red_kmin), red_kmax=f32(self.red_kmax),
+            red_pmax=f32(self.red_pmax),
+            cc_epoch_ticks=i32(self.cc_epoch_ticks), cc_g=f32(self.cc_g),
+            cc_rai=f32(self.cc_rai), cc_rhai=f32(self.cc_rhai),
+            cc_fr_stages=i32(self.cc_fr_stages),
+            cc_min_rate=f32(self.cc_min_rate),
+            sym_on=i32(self.sym_on),
+            sym=SymphonyParams(*(f32(v) for v in self.sym)),
+            sym_win_ticks=i32(self.sym_win_ticks),
+            sym_start_tick=i32(self.sym_start_tick),
+            pq_on=i32(self.pq_on))
+
+    def split(self) -> tuple["SimStructure", "RuntimeKnobs"]:
+        return self.structure(), self.knobs()
+
+
+class SimStructure(NamedTuple):
+    """Shape/compile-time structure: hashable, a jit static argument."""
+    dt: float = 10e-6
+    n_ticks: int = 20_000
+    window: int = 48
+    mtu: float = 1000.0
+    record_every: int = 20
+    share_policy: str = "proportional"
+    deploy: str = "tor"
+    per_step_ecmp: bool = True
+
+
+class RuntimeKnobs(NamedTuple):
+    """Device-traced control knobs: a pytree of f32/i32 scalar leaves.
+
+    Stack along a leading axis (:func:`stack_knobs`) to form a grid that
+    ``simulate_grid`` vmaps through a single compilation.
+    """
+    red_kmin: jax.Array
+    red_kmax: jax.Array
+    red_pmax: jax.Array
+    cc_epoch_ticks: jax.Array
+    cc_g: jax.Array
+    cc_rai: jax.Array
+    cc_rhai: jax.Array
+    cc_fr_stages: jax.Array
+    cc_min_rate: jax.Array
+    sym_on: jax.Array            # 0/1 gate (traced; no recompile to toggle)
+    sym: SymphonyParams          # five f32 leaves (k, tau, warmup, sample, amax)
+    sym_win_ticks: jax.Array
+    sym_start_tick: jax.Array
+    pq_on: jax.Array             # 0/1 gate: strict-priority override
+
+
+class EngineParams(NamedTuple):
+    """Merged trace-time view handed to the stage kernels.
+
+    Field names match :class:`SimParams`, so stages written against the
+    flat config keep working: static fields are Python scalars, knob
+    fields are arrays (scalars, or batched under vmap).  Not a jit
+    argument — it is assembled inside ``simulate_core`` and closed over
+    by the scanned tick function.
+    """
+    dt: float
+    n_ticks: int
+    window: int
+    mtu: float
+    record_every: int
+    share_policy: str
+    deploy: str
+    per_step_ecmp: bool
+    red_kmin: jax.Array
+    red_kmax: jax.Array
+    red_pmax: jax.Array
+    cc_epoch_ticks: jax.Array
+    cc_g: jax.Array
+    cc_rai: jax.Array
+    cc_rhai: jax.Array
+    cc_fr_stages: jax.Array
+    cc_min_rate: jax.Array
+    sym_on: jax.Array
+    sym: SymphonyParams
+    sym_win_ticks: jax.Array
+    sym_start_tick: jax.Array
+    pq_on: jax.Array
+
+
+def merge_params(struct: SimStructure, knobs: RuntimeKnobs) -> EngineParams:
+    return EngineParams(
+        dt=struct.dt, n_ticks=struct.n_ticks, window=struct.window,
+        mtu=struct.mtu, record_every=struct.record_every,
+        share_policy=struct.share_policy, deploy=struct.deploy,
+        per_step_ecmp=struct.per_step_ecmp,
+        **knobs._asdict())
+
+
+def stack_knobs(knobs: Sequence[RuntimeKnobs]) -> RuntimeKnobs:
+    """Stack scalar knob pytrees into one grid pytree with leading axis K."""
+    if not knobs:
+        raise ValueError("empty knob grid")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *knobs)
+
+
+def grid_from_params(cfgs: Sequence[SimParams]
+                     ) -> tuple[SimStructure, RuntimeKnobs]:
+    """Split a list of SimParams into (shared structure, stacked knobs).
+
+    All cfgs must agree on every structural field — a grid sweeps knob
+    values through one compiled program, it cannot change shapes.
+    """
+    if not cfgs:
+        raise ValueError("empty parameter grid")
+    structs = {cfg.structure() for cfg in cfgs}
+    if len(structs) > 1:
+        a, b, *_ = structs
+        diff = [f for f, x, y in zip(a._fields, a, b) if x != y]
+        raise ValueError(
+            f"grid points differ in static structure (fields {diff}); "
+            "sweep only RuntimeKnobs fields, or run separate grids")
+    return cfgs[0].structure(), stack_knobs([cfg.knobs() for cfg in cfgs])

@@ -9,6 +9,26 @@ bandwidth sharing, queues/RED, Symphony marking, DCQCN rate control,
 segment/job progress, metrics) — `simulate_core` only assembles them into
 the scan and handles recording.
 
+Configuration is split along the jit boundary (:mod:`.params`):
+
+* :class:`SimStructure` — static shapes / compile-time choices (`n_ticks`,
+  `window`, `record_every`, `share_policy`, `deploy`, `per_step_ecmp`,
+  `dt`, `mtu`).  A jit static argument; changing a field recompiles.
+* :class:`RuntimeKnobs` — every numeric knob (RED, DCQCN, Symphony, the
+  `sym_on` / `pq_on` 0/1 gates) as traced f32/i32 leaves.  Changing values
+  never recompiles, and grids of knobs vmap through ONE compilation.
+* :class:`SimParams` — the backwards-compatible flat facade; `simulate`,
+  `simulate_seeds` and `simulate_core` still accept it and split it
+  internally, so existing callers keep working unchanged.
+
+Entry points
+------------
+* :func:`simulate`        — one (params, seed) point.
+* :func:`simulate_seeds`  — vmap over seeds (path draws + CC coin flips).
+* :func:`simulate_grid`   — the batched grid executor: one compile,
+  vmap over knob points x seeds, chunked along the knob axis to bound
+  memory.  Result arrays gain leading ``[K, S]`` axes.
+
 Entities
 --------
 flow slot   f in [0, F): persistent (ring, member) sender->successor relation
@@ -26,11 +46,13 @@ Generality
   leaf-spine, 3-tier multi-pod fat-tree, ...): routes are variable-hop
   ``[F, H]`` rows; per-step ECMP re-hashes over the per-flow candidate-path
   table ``[F, P, H]`` instead of assuming one switch tier.
-* Bandwidth sharing is pluggable (``SimParams.share_policy``):
-  ``proportional`` (default), ``pq`` strict 2-class priority, or ``wfq``
-  weighted-fair across jobs (weights via ``build_static(job_weight=...)``).
-* Symphony's deployment tier is configurable (``SimParams.deploy``):
-  ``"tor"`` (ToR-only, the paper's §5 default), ``"all"`` (every switch),
+* Bandwidth sharing is pluggable (``share_policy``): ``proportional``
+  (default), ``pq`` strict 2-class priority, ``wfq`` weighted-fair across
+  jobs (weights via ``build_static(job_weight=...)``), or ``drr`` deficit
+  round-robin; the traced ``pq_on`` gate overrides to strict priority at
+  runtime.
+* Symphony's deployment tier is configurable (``deploy``): ``"tor"``
+  (ToR-only, the paper's §5 default), ``"all"`` (every switch),
   ``"spine"`` (spine/core only).
 
 Time is kept in integer ticks (i32) so float32 never loses precision.
@@ -38,49 +60,27 @@ Time is kept in integer ticks (i32) so float32 never loses precision.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..symphony import SymphonyParams
+from .params import (RuntimeKnobs, SimParams, SimStructure, grid_from_params,
+                     merge_params, stack_knobs)
 from .stages import (BIG, I32MAX, WIRE_SEG, EngineState, WLArrays,  # noqa: F401
-                     engine_tick, init_state, make_ctx, resolve_share_policy)
+                     SHARE_POLICIES, engine_tick, init_state, make_ctx,
+                     resolve_share_policy)
 from .topology import LEVEL_SPINE, LEVEL_TOR, Topology
 from .workload import (Workload, balanced_choice, ecmp_choice, path_table_for,
                        routes_for)
 
-
-class SimParams(NamedTuple):
-    dt: float = 10e-6
-    n_ticks: int = 20_000
-    window: int = 48               # max concurrent steps per slot (W)
-    mtu: float = 1000.0            # bytes per "packet" (psn unit)
-    record_every: int = 20         # metric sampling period (ticks)
-    # RED / ECN (bytes)
-    red_kmin: float = 50e3
-    red_kmax: float = 100e3
-    red_pmax: float = 0.2
-    # DCQCN-style rate control
-    cc_epoch_ticks: int = 5        # 50 us control epoch
-    cc_g: float = 1.0 / 16.0
-    cc_rai: float = 5e6            # additive increase (bytes/s) = 40 Mb/s
-    cc_rhai: float = 25e6          # hyper increase
-    cc_fr_stages: int = 5
-    cc_min_rate: float = 1.25e5    # 1 Mb/s floor (paper §5 "soft limit")
-    # Symphony
-    sym_on: bool = False
-    sym: SymphonyParams = SymphonyParams()
-    sym_win_ticks: int = 10        # T_win = 100 us
-    sym_start_tick: int = 0        # late-start experiments (Fig. 4)
-    deploy: str = "tor"            # Symphony tier: "tor" | "all" | "spine"
-    # Alternatives / knobs
-    pq_on: bool = False            # strict-priority for lagging flows (Fig. 5)
-    share_policy: str = "proportional"  # "proportional" | "pq" | "wfq"
-    per_step_ecmp: bool = True     # re-hash the 5-tuple every step (§4.7: the
-                                   # step index lives in the UDP sport, so each
-                                   # step is a distinct flow to ECMP)
+__all__ = [
+    "SimParams", "SimStructure", "RuntimeKnobs", "SimResult", "Static",
+    "simulate", "simulate_seeds", "simulate_grid", "simulate_core",
+    "build_static", "link_domains", "grid_from_params", "stack_knobs",
+    "core_trace_count",
+]
 
 
 class SimResult(NamedTuple):
@@ -93,6 +93,8 @@ class SimResult(NamedTuple):
     ts_throughput: jax.Array       # [T, J] delivered bytes/s summed over job
     ts_qmax: jax.Array             # [T]    max queue depth (bytes)
     ts_alpha_max: jax.Array        # [T]    max Symphony alpha over ports
+    # batched entry points prepend leading axes: [S, ...] for
+    # simulate_seeds, [K, S, ...] for simulate_grid.
 
 
 class Static(NamedTuple):
@@ -196,9 +198,23 @@ def wl_arrays(wl: Workload, dt: float) -> WLArrays:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def simulate_core(st: Static, wl: WLArrays, cfg: SimParams,
-                  key: jax.Array) -> SimResult:
+# ------------------------------------------------------------------- core
+_TRACES = {"core": 0}
+
+
+def core_trace_count() -> int:
+    """How many times the engine body has been traced (== compiled) in
+    this process.  The grid executor's contract — and the regression test
+    / `netsim_perf` check — is that an entire knob grid adds exactly 1."""
+    return _TRACES["core"]
+
+
+def _core_impl(st: Static, wl: WLArrays, struct: SimStructure,
+               knobs: RuntimeKnobs, key: jax.Array) -> SimResult:
+    """The engine body: shared by the single-run and grid jit wrappers.
+    Executed once per trace, so it doubles as the compile counter."""
+    _TRACES["core"] += 1
+    cfg = merge_params(struct, knobs)
     resolve_share_policy(cfg)        # fail fast on unknown policy names
     ctx = make_ctx(st, wl, cfg.window)
     state0 = init_state(ctx, key)
@@ -224,9 +240,82 @@ def simulate_core(st: Static, wl: WLArrays, cfg: SimParams,
     )
 
 
-def _resolve_routing(cfg: SimParams, routing: str) -> tuple[SimParams, str]:
+def _grid_impl(st_stack: Static, wl: WLArrays, struct: SimStructure,
+               knobs_stack: RuntimeKnobs, keys: jax.Array) -> SimResult:
+    """vmap knob points x seeds through one trace of the engine body.
+
+    The (K knobs, S seeds) cross product is flattened to a SINGLE batch
+    axis of K*S lanes rather than nested vmaps: one-level batching keeps
+    XLA's scatter-add accumulation order per lane identical to the
+    unbatched program, so grid slices are bitwise-equal to per-point
+    ``simulate`` calls (nested vmaps reorder the adds by ~1 ulp).
+    Outputs are reshaped back to leading ``[K, S]``.
+    """
+    K = int(jax.tree.leaves(knobs_stack)[0].shape[0])
+    S = int(keys.shape[0])
+    sts = jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            x[None], (K,) + x.shape).reshape((K * S,) + x.shape[1:]),
+        st_stack)
+    kns = jax.tree.map(lambda x: jnp.repeat(x, S, axis=0), knobs_stack)
+    kys = jnp.broadcast_to(keys[None], (K,) + keys.shape).reshape(
+        (K * S,) + keys.shape[1:])
+    flat = jax.vmap(lambda st, kn, k: _core_impl(st, wl, struct, kn, k))(
+        sts, kns, kys)
+    return jax.tree.map(
+        lambda x: x.reshape((K, S) + x.shape[1:]), flat)
+
+
+_grid_core = functools.partial(jax.jit, static_argnames=("struct",))(
+    _grid_impl)
+
+
+def simulate_core(st: Static, wl: WLArrays, cfg, knobs_or_key, key=None
+                  ) -> SimResult:
+    """Jitted core.  Two call forms:
+
+    * new:    ``simulate_core(st, wl, structure, knobs, key)``
+    * legacy: ``simulate_core(st, wl, sim_params, key)`` — the flat
+      :class:`SimParams` is split internally; knob values are traced, so
+      repeat calls with different knob values reuse one compilation.
+
+    Dispatches through the grid core as a 1x1 grid: every entry point
+    runs the SAME compiled program family, which keeps single runs
+    bitwise-consistent with grid slices (separately-compiled unbatched
+    programs can differ by ~1 ulp through XLA fusion reassociation).
+    """
+    if isinstance(cfg, SimParams):
+        if key is not None:
+            raise TypeError("legacy form is simulate_core(st, wl, cfg, key)")
+        resolve_share_policy(cfg)    # full static validation (pq_on conflicts)
+        struct, knobs = cfg.split()
+        key = knobs_or_key
+    else:
+        struct, knobs = cfg, knobs_or_key
+        _check_pq_conflict(struct, knobs.pq_on)
+    res = _grid_core(jax.tree.map(lambda x: x[None], st), wl, struct,
+                     jax.tree.map(lambda x: x[None], knobs), key[None])
+    return jax.tree.map(lambda x: x[0, 0], res)
+
+
+def _check_pq_conflict(struct: SimStructure, pq_on) -> None:
+    """Same conflict rule ``resolve_share_policy`` enforces for static
+    configs: the pq_on gate overrides the base policy at runtime, so a
+    pq point under a wfq/drr structure would silently run strict
+    priority.  Knob values are concrete pre-jit, so this is checkable."""
+    if struct.share_policy not in ("proportional", "pq") and \
+            bool(np.any(np.asarray(pq_on))):
+        raise ValueError(
+            f"pq_on=True conflicts with share_policy="
+            f"{struct.share_policy!r}; use pq only over a "
+            "proportional-base structure")
+
+
+# ------------------------------------------------------------ entry points
+def _resolve_routing(cfg, routing: str):
     """Routing modes: 'ecmp' (per-step re-hash, default), 'ecmp_flow'
-    (persistent per-flow paths), 'balanced' (static round-robin)."""
+    (persistent per-flow paths), 'balanced' (static round-robin).
+    Works on SimParams and SimStructure alike."""
     if routing == "ecmp":
         return cfg._replace(per_step_ecmp=True), "ecmp"
     if routing == "ecmp_flow":
@@ -250,14 +339,80 @@ def simulate(topo: Topology, wl: Workload, cfg: SimParams,
     return simulate_core(st, wl_arrays(wl, cfg.dt), cfg, jax.random.PRNGKey(seed))
 
 
-def simulate_seeds(topo: Topology, wl: Workload, cfg: SimParams,
-                   routing: str, seeds: list[int], **bg) -> SimResult:
-    """vmap over seeds: both the ECMP path draw and the DCQCN coin flips vary."""
-    cfg, mode = _resolve_routing(cfg, routing)
-    statics = [build_static(topo, wl, mode, s, dt=cfg.dt, deploy=cfg.deploy,
-                            **bg) for s in seeds]
+def _stacked_statics(topo, wl, mode, seeds, struct, bg_base=None, bg_amp=None,
+                     bg_period=1e-3, bg_duty=0.0, job_weight=None):
+    statics = [build_static(topo, wl, mode, s, bg_base, bg_amp, bg_period,
+                            bg_duty, struct.dt, deploy=struct.deploy,
+                            job_weight=job_weight) for s in seeds]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *statics)
     keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
-    wla = wl_arrays(wl, cfg.dt)
-    fn = jax.vmap(lambda st, k: simulate_core(st, wla, cfg, k))
-    return fn(stacked, keys)
+    return stacked, keys
+
+
+def simulate_seeds(topo: Topology, wl: Workload, cfg: SimParams,
+                   routing: str, seeds: Sequence[int], **bg) -> SimResult:
+    """vmap over seeds: both the ECMP path draw and the DCQCN coin flips
+    vary.  Result arrays gain a leading ``[S]`` axis.
+
+    Implemented as a 1-point knob grid, so it shares the grid executor's
+    compilation cache."""
+    resolve_share_policy(cfg)
+    struct, knobs = cfg.split()
+    res = simulate_grid(topo, wl, struct,
+                        jax.tree.map(lambda x: x[None], knobs), seeds,
+                        routing=routing, **bg)
+    return jax.tree.map(lambda x: x[0], res)
+
+
+def simulate_grid(topo: Topology, wl: Workload, struct: SimStructure,
+                  knobs_grid, seeds: Sequence[int] = (0,),
+                  routing: str = "ecmp", chunk_knobs: int | None = None,
+                  **bg) -> SimResult:
+    """Batched grid executor: one compile, vmap over knob points x seeds.
+
+    ``knobs_grid`` is a stacked :class:`RuntimeKnobs` pytree (leading axis
+    K), or a sequence of per-point ``RuntimeKnobs`` / ``SimParams`` (the
+    latter must share ``struct``'s static structure).  Build one from flat
+    configs with :func:`grid_from_params`.
+
+    The grid is chunked along the knob axis (``chunk_knobs`` points per
+    device batch, default: the whole grid) to bound memory; the last chunk
+    is padded by repeating the final point, so every chunk has the same
+    shape and the engine still traces exactly once.
+
+    Returns a :class:`SimResult` whose arrays carry leading ``[K, S]``
+    axes (knob point x seed).
+    """
+    if (isinstance(knobs_grid, (list, tuple))
+            and not isinstance(knobs_grid, RuntimeKnobs)):
+        pts = [p.knobs() if isinstance(p, SimParams) else p
+               for p in knobs_grid]
+        for p in knobs_grid:
+            if isinstance(p, SimParams) and p.structure() != struct:
+                raise ValueError(
+                    "grid point differs from struct in static fields; "
+                    "use grid_from_params to derive a common structure")
+        knobs_grid = stack_knobs(pts)
+    if struct.share_policy not in SHARE_POLICIES:
+        raise ValueError(
+            f"unknown share policy {struct.share_policy!r}; "
+            f"have {sorted(SHARE_POLICIES)}")
+    _check_pq_conflict(struct, knobs_grid.pq_on)
+    struct, mode = _resolve_routing(struct, routing)
+    stacked, keys = _stacked_statics(topo, wl, mode, seeds, struct, **bg)
+    wla = wl_arrays(wl, struct.dt)
+
+    K = int(jax.tree.leaves(knobs_grid)[0].shape[0])
+    chunk = K if chunk_knobs is None else max(1, min(int(chunk_knobs), K))
+    pad = (-K) % chunk
+    if pad:
+        knobs_grid = jax.tree.map(
+            lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]),
+            knobs_grid)
+    outs = []
+    for i in range(0, K + pad, chunk):
+        kn = jax.tree.map(lambda x: x[i:i + chunk], knobs_grid)
+        outs.append(_grid_core(stacked, wla, struct, kn, keys))
+    if len(outs) == 1:
+        return outs[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0)[:K], *outs)

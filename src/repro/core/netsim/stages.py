@@ -12,9 +12,11 @@ Stage order (one tick):
 2. :func:`instance_view`       — per-instance arrays incl. route selection
                                  (per-step ECMP re-hash over the candidate
                                  path table, any hop count)
-3. ``SHARE_POLICIES[...]``     — bandwidth sharing: ``proportional`` fluid
+3. :func:`stage_share`         — bandwidth sharing: ``proportional`` fluid
                                  max-min approximation, ``pq`` 2-class
-                                 strict priority, ``wfq`` weighted fair
+                                 strict priority, ``wfq`` weighted fair,
+                                 ``drr`` deficit round-robin; the traced
+                                 ``pq_on`` gate overrides at runtime
 4. :func:`stage_queues`        — queue integration + RED profile
 5. :func:`stage_marking`       — RED x Symphony selective marking -> lambda
 6. :func:`stage_progress`      — byte progress, completions, finish times
@@ -22,6 +24,13 @@ Stage order (one tick):
 8. :func:`stage_rate_control`  — DCQCN-style epoch update
 9. :func:`stage_segments`      — segment barriers and job finish
 10. :func:`stage_metrics`      — sampled observables
+
+The ``cfg`` argument of every stage is attribute-compatible with both the
+flat :class:`~repro.core.netsim.params.SimParams` (all-Python legacy view)
+and the merged :class:`~repro.core.netsim.params.EngineParams`, whose knob
+fields (RED/CC/Symphony constants, ``sym_on``/``pq_on`` gates) are traced
+arrays — so the same stage code serves single runs and vmapped knob grids
+without retracing per parameter point.
 """
 from __future__ import annotations
 
@@ -343,10 +352,37 @@ def share_wfq(ctx: EngineCtx, cfg, inst: InstView, tick) -> ShareResult:
     return ShareResult(eff=eff, offered=offered)
 
 
+def share_drr(ctx: EngineCtx, cfg, inst: InstView, tick) -> ShareResult:
+    """Deficit round-robin (fluid approximation): every link serves its
+    active instances an equal per-round quantum regardless of job, and the
+    deficit left by rate-limited instances is redistributed to the still-
+    hungry ones in a second round (two-round water-filling)."""
+    st, H, L = ctx.st, ctx.H, ctx.L
+    w_rate = jnp.where(inst.active, inst.irate, 0.0)
+    bg = background_load(ctx, tick)
+    act = inst.active.astype(jnp.float32)
+    n_act = jnp.zeros(L + 1).at[inst.flat_links].add(jnp.repeat(act, H))
+    avail = jnp.maximum(st.cap - bg, 0.0)
+    quantum = avail / jnp.maximum(n_act, 1.0)
+    take1 = jnp.minimum(w_rate, quantum[inst.iroute].min(axis=1))
+    used = jnp.zeros(L + 1).at[inst.flat_links].add(jnp.repeat(take1, H))
+    want = inst.active & (take1 < w_rate)
+    n_want = jnp.zeros(L + 1).at[inst.flat_links].add(
+        jnp.repeat(want.astype(jnp.float32), H))
+    bonus = jnp.maximum(avail - used, 0.0) / jnp.maximum(n_want, 1.0)
+    take2 = jnp.where(want,
+                      jnp.minimum(w_rate - take1,
+                                  bonus[inst.iroute].min(axis=1)), 0.0)
+    offered = jnp.zeros(L + 1).at[inst.flat_links].add(
+        jnp.repeat(w_rate, H)) + bg
+    return ShareResult(eff=take1 + take2, offered=offered)
+
+
 SHARE_POLICIES: dict[str, Callable[..., ShareResult]] = {
     "proportional": share_proportional,
     "pq": share_pq,
     "wfq": share_wfq,
+    "drr": share_drr,
 }
 
 
@@ -369,13 +405,14 @@ def stage_marking(ctx: EngineCtx, cfg, state: EngineState, inst: InstView,
     sm = state.s_stepmin[inst.dj]
     pw = state.s_psnwin[inst.dj]
     al = state.s_alpha[inst.dj]
-    if cfg.sym_on:
-        p_sym = marking_probability(
-            inst.iwire[:, None], inst.ipsn[:, None], sm, pw, al, cfg.sym)
-        p_sym = jnp.where(inst.idom < D, p_sym, 0.0)
-        p_sym = jnp.where(tick >= cfg.sym_start_tick, p_sym, 0.0)
-    else:
-        p_sym = jnp.zeros_like(pw)
+    # sym_on is a traced 0/1 gate (RuntimeKnobs): the marking math is always
+    # in the program and selected at runtime, so one compile serves both the
+    # baseline and the Symphony points of a knob grid.
+    p_sym = marking_probability(
+        inst.iwire[:, None], inst.ipsn[:, None], sm, pw, al, cfg.sym)
+    p_sym = jnp.where(inst.idom < D, p_sym, 0.0)
+    sym_gate = (jnp.asarray(cfg.sym_on) != 0) & (tick >= cfg.sym_start_tick)
+    p_sym = jnp.where(sym_gate, p_sym, 0.0)
     p_hop = 1.0 - (1.0 - p_red[inst.iroute]) * (1.0 - p_sym)
     log_nomark = jnp.sum(jnp.log1p(-jnp.minimum(p_hop, 0.999999)), axis=1)
     p_inst = 1.0 - jnp.exp(log_nomark)
@@ -437,10 +474,10 @@ def stage_symphony(ctx: EngineCtx, cfg, state: EngineState, inst: InstView,
         jnp.where(send4 & ~done4 & (wire4 == stepmin[djf]), psn4, 0.0))
 
     sym_epoch = (tick % cfg.sym_win_ticks) == (cfg.sym_win_ticks - 1)
-    have = cnt > jnp.float32(cfg.sym.n_sample)
-    exceed = cntop >= jnp.float32(cfg.sym.tau) * cnt
+    have = cnt > jnp.asarray(cfg.sym.n_sample, jnp.float32)
+    exceed = cntop >= jnp.asarray(cfg.sym.tau, jnp.float32) * cnt
     alpha_new = jnp.clip(state.s_alpha + jnp.where(exceed, 1.0, -1.0) * have,
-                         1.0, jnp.float32(cfg.sym.alpha_max))
+                         1.0, jnp.asarray(cfg.sym.alpha_max, jnp.float32))
     s_alpha = jnp.where(sym_epoch, alpha_new, state.s_alpha)
     s_cnt = jnp.where(sym_epoch, 0.0, cnt)
     s_cntop = jnp.where(sym_epoch, 0.0, cntop)
@@ -514,17 +551,32 @@ def stage_metrics(ctx: EngineCtx, inst: InstView, done_upto, eff, q, s_alpha):
     max_wire = jnp.full(J, -1).at[ctx.inst_job].max(
         jnp.where(inst.active, inst.iwire, -1))
     done_min = jnp.full(J, BIG).at[ctx.wl.job].min(done_upto)
-    tput = jnp.zeros(J).at[ctx.inst_job].add(eff)
+    # masked sum, not scatter-add: vmap batching rewrites scatter-add
+    # accumulation order (ULP drift), while a fixed-axis reduction keeps
+    # grid slices bitwise-equal to single runs.  J is small, so the dense
+    # [J, FW] mask is cheap.
+    tput = jnp.sum(
+        jnp.where(ctx.inst_job[None, :] == jnp.arange(J)[:, None],
+                  eff[None, :], 0.0), axis=1)
     return (min_wire, max_wire, done_min, tput, q[:L].max(), s_alpha.max())
 
 
 # ------------------------------------------------------------ composition
+def static_pq_on(cfg):
+    """``pq_on`` as a Python bool when static, else None (traced gate)."""
+    pq = getattr(cfg, "pq_on", False)
+    if isinstance(pq, jax.Array):
+        return None
+    return bool(pq)
+
+
 def resolve_share_policy(cfg) -> Callable[..., ShareResult]:
-    if cfg.pq_on and cfg.share_policy not in ("proportional", "pq"):
+    pq = static_pq_on(cfg)
+    if pq and cfg.share_policy not in ("proportional", "pq"):
         raise ValueError(
             f"pq_on=True conflicts with share_policy={cfg.share_policy!r}; "
             "drop the legacy pq_on flag when selecting a policy explicitly")
-    name = "pq" if cfg.pq_on else cfg.share_policy
+    name = "pq" if pq else cfg.share_policy
     try:
         return SHARE_POLICIES[name]
     except KeyError:
@@ -532,12 +584,31 @@ def resolve_share_policy(cfg) -> Callable[..., ShareResult]:
             f"unknown share policy {name!r}; have {sorted(SHARE_POLICIES)}")
 
 
+def stage_share(ctx: EngineCtx, cfg, inst: InstView, tick) -> ShareResult:
+    """Bandwidth sharing with the runtime ``pq_on`` override.
+
+    The base policy is static (``cfg.share_policy`` names the compiled
+    program).  A traced ``pq_on`` gate switches to strict priority via
+    ``lax.cond``: a scalar predicate executes one branch at runtime; under
+    vmap (knob grids) it lowers to a select so mixed baseline/PQ grids
+    still share one compilation.
+    """
+    base_fn = resolve_share_policy(cfg)
+    if static_pq_on(cfg) is not None:   # legacy all-static config
+        return base_fn(ctx, cfg, inst, tick)
+    if base_fn is share_pq:
+        return share_pq(ctx, cfg, inst, tick)
+    return jax.lax.cond(
+        jnp.asarray(cfg.pq_on) != 0,
+        lambda: share_pq(ctx, cfg, inst, tick),
+        lambda: base_fn(ctx, cfg, inst, tick))
+
+
 def engine_tick(ctx: EngineCtx, cfg, state: EngineState, tick):
     """One tick: compose the stages.  Returns (state', metric sample)."""
-    share_fn = resolve_share_policy(cfg)
     starts = stage_starts(ctx, state, tick)
     inst = instance_view(ctx, starts, state, cfg.mtu, cfg.per_step_ecmp)
-    shr = share_fn(ctx, cfg, inst, tick)
+    shr = stage_share(ctx, cfg, inst, tick)
     q, p_red = stage_queues(ctx, cfg, state.q, shr.offered)
     lam, pkts, sm = stage_marking(ctx, cfg, state, inst, p_red, shr.eff,
                                   starts.lam, tick)
