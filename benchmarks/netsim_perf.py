@@ -20,9 +20,21 @@ Measures, on the Table-1 scenario:
 
 Under BENCH_QUICK the per-point reference is sampled on a subset of the
 grid and extrapolated (compiles dominate it, so this is conservative).
+
+The result also carries an xla-vs-pallas tick-backend comparison and is
+persisted as ``BENCH_netsim.json`` at the repo root — the tracked perf
+artifact.  ``python -m benchmarks.netsim_perf`` refreshes it;
+``python -m benchmarks.netsim_perf --check`` re-measures and compares
+against the committed numbers (warn-only: CI hosts are 2-core shared
+VMs, so throughput is gated loosely and never fails the build).
 """
 import functools
+import json
+import os
+import platform
+import sys
 import time
+from pathlib import Path
 
 import jax
 
@@ -33,11 +45,15 @@ from repro.core.netsim.simulator import (_core_impl, _resolve_routing,
 
 from .common import QUICK, build_scenario, cached, default_params, knob_grid
 
+BENCH_FILE = Path(__file__).resolve().parents[1] / "BENCH_netsim.json"
+BENCH_SCHEMA = 1
+
 # single source of truth for the benchmark parameters and the cache key
 CONFIG = dict(n_ticks=2_000 if QUICK else 30_000,
               taus=(0.1, 0.2, 0.25, 0.5), ks=(1e-3, 3e-3, 1e-2, 3e-2),
               n_seeds=4 if QUICK else 8,
-              grid_seeds=1 if QUICK else 2)
+              grid_seeds=1 if QUICK else 2,
+              backends=("xla", "pallas"))
 
 
 def _per_point_reference(topo, wl, cfgs, seed=0):
@@ -65,6 +81,35 @@ def _per_point_reference(topo, wl, cfgs, seed=0):
         jax.block_until_ready(compiled(st, wla, knobs=knobs, key=key))
         wall += time.time() - t0
     return wall + comp, comp
+
+
+def backend_compare(topo, wl, cfg):
+    """Warm-run ticks/sec for the staged XLA tick vs the fused Pallas
+    kernel (``kernels/netsim_tick``).  On the CPU CI host the kernel runs
+    in interpret mode — it traces into the same XLA program, so parity
+    (~1.0x) is the expected result there; the fusion win is a memory-
+    traffic story on real accelerators (see ``benchmarks/roofline.py``'s
+    ``netsim_tick`` section for the analytic bytes-moved model)."""
+    from repro.kernels.netsim_tick import use_interpret
+    n_ticks = cfg.n_ticks
+    out = {}
+    for be in ("xla", "pallas"):
+        c = cfg._replace(backend=be)
+        t0 = time.time()
+        jax.block_until_ready(simulate(topo, wl, c, "ecmp", 0))
+        cold = time.time() - t0
+        t0 = time.time()
+        jax.block_until_ready(simulate(topo, wl, c, "ecmp", 1))
+        warm = time.time() - t0
+        out[be] = {
+            "compile_plus_run_s": round(cold, 2),
+            "single_run_s": round(warm, 3),
+            "ticks_per_s": round(n_ticks / warm),
+        }
+    out["pallas_interpret"] = use_interpret()
+    out["pallas_vs_xla"] = round(
+        out["pallas"]["ticks_per_s"] / out["xla"]["ticks_per_s"], 2)
+    return out
 
 
 def run():
@@ -116,7 +161,9 @@ def run():
     pp_run = pp_total - pp_comp
     pp_comp *= scale_k
     pp_wall = pp_comp + pp_run * scale_k * len(grid_seeds)
+    backends = backend_compare(topo, wl, cfg)
     return {
+        "backends": backends,
         "compile_plus_run_s": round(cold, 2),
         "single_run_s": round(warm, 2),
         "ticks_per_s_single": round(n_ticks / warm),
@@ -139,3 +186,91 @@ def run():
 
 def bench():
     return cached("netsim_perf", run, config=CONFIG)
+
+
+# --------------------------------------------- BENCH_netsim.json artifact
+def _mode() -> str:
+    return "quick" if QUICK else "full"
+
+
+def write_bench(result) -> dict:
+    """Merge this run into the committed perf artifact, keyed by mode
+    ("quick" = the CI configuration, "full" = the local 30k-tick one)."""
+    data = {}
+    if BENCH_FILE.exists():
+        data = json.loads(BENCH_FILE.read_text())
+        if data.get("schema") != BENCH_SCHEMA:
+            data = {}
+    data["schema"] = BENCH_SCHEMA
+    data[_mode()] = {
+        "config": {k: list(v) if isinstance(v, tuple) else v
+                   for k, v in CONFIG.items()},
+        "host": {"cpu_count": os.cpu_count(),
+                 "machine": platform.machine(),
+                 "jax": jax.__version__,
+                 "jax_backend": jax.default_backend()},
+        "result": result,
+    }
+    BENCH_FILE.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+    return data
+
+
+# Ticks/sec metrics gated by --check, as (path into the result dict).
+_GATED = (("ticks_per_s_single",), ("ticks_per_s_vmap",),
+          ("backends", "xla", "ticks_per_s"),
+          ("backends", "pallas", "ticks_per_s"))
+# Warn below 0.5x committed: CI runs on shared 2-core VMs whose absolute
+# throughput swings widely run-to-run, so the gate is loose and warn-only —
+# it catches order-of-magnitude regressions, not percent-level ones.
+CHECK_RATIO = 0.5
+
+
+def check() -> int:
+    """Warn-only regression gate against the committed BENCH_netsim.json."""
+    if not BENCH_FILE.exists():
+        print(f"netsim_perf --check: no {BENCH_FILE.name}; skipping")
+        return 0
+    data = json.loads(BENCH_FILE.read_text())
+    entry = data.get(_mode())
+    if data.get("schema") != BENCH_SCHEMA or entry is None:
+        print(f"netsim_perf --check: no committed '{_mode()}' entry "
+              f"(schema {data.get('schema')}); skipping")
+        return 0
+    committed, fresh = entry["result"], run()
+    warned = False
+    for path in _GATED:
+        want, have = committed, fresh
+        try:
+            for k in path:
+                want, have = want[k], have[k]
+        except KeyError:
+            continue
+        label = ".".join(path)
+        line = (f"  {label}: {have} vs committed {want} "
+                f"({have / want:.2f}x)")
+        if have < CHECK_RATIO * want:
+            # ::warning:: renders as a GitHub Actions annotation
+            print(f"::warning title=netsim_perf regression::{label} "
+                  f"{have} < {CHECK_RATIO} * committed {want}")
+            warned = True
+        print(line)
+    host = entry.get("host", {})
+    print(f"  committed on {host.get('cpu_count')}-core "
+          f"{host.get('machine')} / jax {host.get('jax')}; warn-only "
+          f"(shared 2-core CI hosts make hard throughput gates meaningless)")
+    print("netsim_perf --check:", "WARNINGS above" if warned else "ok")
+    return 0
+
+
+def main(argv) -> int:
+    if "--check" in argv:
+        return check()
+    res = bench()
+    write_bench(res)
+    print(json.dumps(res, indent=1))
+    print(f"wrote {BENCH_FILE}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -63,13 +63,15 @@ class SimParams(NamedTuple):
     per_step_ecmp: bool = True     # re-hash the 5-tuple every step (§4.7: the
                                    # step index lives in the UDP sport, so each
                                    # step is a distinct flow to ECMP)
+    backend: str = "xla"           # tick hot-path backend: "xla" staged ops |
+                                   # "pallas" fused kernel (kernels/netsim_tick)
 
     def structure(self) -> "SimStructure":
         return SimStructure(
             dt=self.dt, n_ticks=self.n_ticks, window=self.window,
             mtu=self.mtu, record_every=self.record_every,
             share_policy=self.share_policy, deploy=self.deploy,
-            per_step_ecmp=self.per_step_ecmp)
+            per_step_ecmp=self.per_step_ecmp, backend=self.backend)
 
     def knobs(self) -> "RuntimeKnobs":
         f32 = lambda v: jnp.asarray(v, jnp.float32)
@@ -101,6 +103,7 @@ class SimStructure(NamedTuple):
     share_policy: str = "proportional"
     deploy: str = "tor"
     per_step_ecmp: bool = True
+    backend: str = "xla"
 
 
 class RuntimeKnobs(NamedTuple):
@@ -142,6 +145,7 @@ class EngineParams(NamedTuple):
     share_policy: str
     deploy: str
     per_step_ecmp: bool
+    backend: str
     red_kmin: jax.Array
     red_kmax: jax.Array
     red_pmax: jax.Array
@@ -163,7 +167,7 @@ def merge_params(struct: SimStructure, knobs: RuntimeKnobs) -> EngineParams:
         dt=struct.dt, n_ticks=struct.n_ticks, window=struct.window,
         mtu=struct.mtu, record_every=struct.record_every,
         share_policy=struct.share_policy, deploy=struct.deploy,
-        per_step_ecmp=struct.per_step_ecmp,
+        per_step_ecmp=struct.per_step_ecmp, backend=struct.backend,
         **knobs._asdict())
 
 

@@ -13,7 +13,9 @@ Configuration is split along the jit boundary (:mod:`.params`):
 
 * :class:`SimStructure` — static shapes / compile-time choices (`n_ticks`,
   `window`, `record_every`, `share_policy`, `deploy`, `per_step_ecmp`,
-  `dt`, `mtu`).  A jit static argument; changing a field recompiles.
+  `dt`, `mtu`, and the tick `backend`: `"xla"` staged ops vs `"pallas"`
+  fused kernel, see :mod:`repro.kernels.netsim_tick`).  A jit static
+  argument; changing a field recompiles.
 * :class:`RuntimeKnobs` — every numeric knob (RED, DCQCN, Symphony, the
   `sym_on` / `pq_on` 0/1 gates) as traced f32/i32 leaves.  Changing values
   never recompiles, and grids of knobs vmap through ONE compilation.
@@ -69,8 +71,8 @@ import numpy as np
 from .params import (RuntimeKnobs, SimParams, SimStructure, grid_from_params,
                      merge_params, stack_knobs)
 from .stages import (BIG, I32MAX, WIRE_SEG, EngineState, WLArrays,  # noqa: F401
-                     SHARE_POLICIES, engine_tick, init_state, make_ctx,
-                     resolve_share_policy)
+                     BACKENDS, SHARE_POLICIES, engine_tick, init_state,
+                     make_ctx, resolve_share_policy)
 from .topology import LEVEL_SPINE, LEVEL_TOR, Topology
 from .workload import (Workload, balanced_choice, ecmp_choice, path_table_for,
                        routes_for)
@@ -397,6 +399,9 @@ def simulate_grid(topo: Topology, wl: Workload, struct: SimStructure,
         raise ValueError(
             f"unknown share policy {struct.share_policy!r}; "
             f"have {sorted(SHARE_POLICIES)}")
+    if struct.backend not in BACKENDS:
+        raise ValueError(
+            f"unknown tick backend {struct.backend!r}; have {BACKENDS}")
     _check_pq_conflict(struct, knobs_grid.pq_on)
     struct, mode = _resolve_routing(struct, routing)
     stacked, keys = _stacked_statics(topo, wl, mode, seeds, struct, **bg)

@@ -226,8 +226,28 @@ def stage_starts(ctx: EngineCtx, state: EngineState, tick) -> Starts:
 
 
 # ------------------------------------------------------- 2. instance view
+def per_hop(x: jax.Array, H: int) -> jax.Array:
+    """Expand a per-instance [FW] array to one entry per (instance, hop)
+    [FW*H], aligned with ``InstView.flat_links`` / ``.djf``."""
+    return jnp.repeat(x, H)
+
+
+def link_scatter_sum(flat_links: jax.Array, vals: jax.Array, H: int,
+                     n_rows: int) -> jax.Array:
+    """Scatter-add per-instance values onto their path links: the one
+    segment-sum every share policy (and the fused kernel) is built on."""
+    return jnp.zeros(n_rows).at[flat_links].add(per_hop(vals, H))
+
+
 class InstView(NamedTuple):
-    """Flattened [FW] per-instance arrays for this tick."""
+    """Flattened [FW] per-instance arrays for this tick.
+
+    The per-hop expansion (``jnp.repeat(..., H)``) and the flat-link
+    scatter setup are precomputed once here and consumed through
+    :meth:`per_hop` / :meth:`link_sum` / :meth:`path_min`, so every share
+    policy — and the fused ``netsim_tick`` kernel — shares one index set
+    instead of rebuilding it per policy.
+    """
     istep: jax.Array; isent: jax.Array; irate: jax.Array
     iseg: jax.Array; ichunk: jax.Array; iwire: jax.Array; ipsn: jax.Array
     occupied: jax.Array; retired: jax.Array; complete: jax.Array
@@ -237,6 +257,22 @@ class InstView(NamedTuple):
     idom: jax.Array          # [FW, H] Symphony domain per hop
     dj: jax.Array            # [FW, H] (domain, job) row ids
     djf: jax.Array           # [FW*H]
+
+    @property
+    def H(self) -> int:
+        return int(self.iroute.shape[-1])
+
+    def per_hop(self, x: jax.Array) -> jax.Array:
+        """[FW] -> [FW*H], aligned with ``flat_links``."""
+        return per_hop(x, self.H)
+
+    def link_sum(self, ctx: "EngineCtx", vals: jax.Array) -> jax.Array:
+        """Scatter-add per-instance ``vals`` onto the [L+1] link axis."""
+        return link_scatter_sum(self.flat_links, vals, self.H, ctx.L + 1)
+
+    def path_min(self, per_link: jax.Array) -> jax.Array:
+        """Worst per-hop value along each instance's path: [L+1] -> [FW]."""
+        return per_link[self.iroute].min(axis=1)
 
 
 def select_routes(ctx: EngineCtx, istep, per_step_ecmp: bool) -> jax.Array:
@@ -258,7 +294,11 @@ def select_routes(ctx: EngineCtx, istep, per_step_ecmp: bool) -> jax.Array:
 
 
 def instance_view(ctx: EngineCtx, starts: Starts, state: EngineState,
-                  mtu: float, per_step_ecmp: bool) -> InstView:
+                  mtu: float, per_step_ecmp: bool,
+                  iroute: jax.Array | None = None) -> InstView:
+    """Assemble the per-instance view.  ``iroute`` may be precomputed (the
+    fused kernel selects routes on-chip and hands them back) — otherwise
+    it is derived here via :func:`select_routes`."""
     st, J = ctx.st, ctx.J
     istep = starts.step_of.reshape(ctx.FW)
     isent = starts.sent.reshape(ctx.FW)
@@ -270,7 +310,8 @@ def instance_view(ctx: EngineCtx, starts: Starts, state: EngineState,
     retired = occupied & (istep < state.done_upto[ctx.inst_flow])
     complete = occupied & (isent >= ichunk)
     active = occupied & ~complete & ~retired
-    iroute = select_routes(ctx, istep, per_step_ecmp)
+    if iroute is None:
+        iroute = select_routes(ctx, istep, per_step_ecmp)
     idom = st.link_dom[iroute]
     dj = idom * J + ctx.inst_job[:, None]
     return InstView(
@@ -299,32 +340,29 @@ def share_proportional(ctx: EngineCtx, cfg, inst: InstView, tick
                        ) -> ShareResult:
     """Fluid max-min approximation: every link scales its offered load by
     cap/offered; an instance gets the worst scale along its path."""
-    st, H, L = ctx.st, ctx.H, ctx.L
+    st = ctx.st
     w_rate = jnp.where(inst.active, inst.irate, 0.0)
     bg = background_load(ctx, tick)
-    offered = jnp.zeros(L + 1).at[inst.flat_links].add(
-        jnp.repeat(w_rate, H)) + bg
+    offered = inst.link_sum(ctx, w_rate) + bg
     s_l = jnp.minimum(1.0, st.cap / jnp.maximum(offered, 1.0))
-    eff_scale = s_l[inst.iroute].min(axis=1)
-    return ShareResult(eff=w_rate * eff_scale, offered=offered)
+    return ShareResult(eff=w_rate * inst.path_min(s_l), offered=offered)
 
 
 def share_pq(ctx: EngineCtx, cfg, inst: InstView, tick) -> ShareResult:
     """2-class strict priority: the job's oldest active step is high class
     (Fig. 5 "PQ"); the low class shares what remains."""
-    st, H, L, J = ctx.st, ctx.H, ctx.L, ctx.J
+    st, J = ctx.st, ctx.J
     w_rate = jnp.where(inst.active, inst.irate, 0.0)
     bg = background_load(ctx, tick)
     job_min_wire = jnp.full(J, BIG).at[ctx.inst_job].min(
         jnp.where(inst.active, inst.iwire, BIG))
     is_hi = inst.active & (inst.iwire <= job_min_wire[ctx.inst_job])
     hi_rate = jnp.where(is_hi, inst.irate, 0.0)
-    off_hi = jnp.zeros(L + 1).at[inst.flat_links].add(
-        jnp.repeat(hi_rate, H)) + bg
+    off_hi = inst.link_sum(ctx, hi_rate) + bg
     s_hi = jnp.minimum(1.0, st.cap / jnp.maximum(off_hi, 1.0))
     rem = jnp.maximum(st.cap - off_hi * s_hi, 0.0)
     lo_rate = jnp.where(inst.active & ~is_hi, inst.irate, 0.0)
-    off_lo = jnp.zeros(L + 1).at[inst.flat_links].add(jnp.repeat(lo_rate, H))
+    off_lo = inst.link_sum(ctx, lo_rate)
     s_lo = rem / jnp.maximum(off_lo, 1.0)
     share = jnp.where(is_hi[:, None], s_hi[inst.iroute],
                       jnp.minimum(1.0, s_lo[inst.iroute]))
@@ -337,19 +375,17 @@ def share_wfq(ctx: EngineCtx, cfg, inst: InstView, tick) -> ShareResult:
     over active instances proportionally to their job's weight
     (``Static.job_weight``); an instance is capped at its own rate and takes
     the worst per-hop allowance (one-shot water-filling approximation)."""
-    st, H, L = ctx.st, ctx.H, ctx.L
+    st = ctx.st
     w_rate = jnp.where(inst.active, inst.irate, 0.0)
     bg = background_load(ctx, tick)
     wgt = st.job_weight[ctx.inst_job]
     w_act = jnp.where(inst.active, wgt, 0.0)
-    wsum = jnp.zeros(L + 1).at[inst.flat_links].add(jnp.repeat(w_act, H))
+    wsum = inst.link_sum(ctx, w_act)
     avail = jnp.maximum(st.cap - bg, 0.0)
     fair = avail / jnp.maximum(wsum, 1e-9)           # bytes/s per unit weight
     allowed = wgt[:, None] * fair[inst.iroute]       # [FW, H]
     eff = jnp.minimum(w_rate, allowed.min(axis=1))
-    offered = jnp.zeros(L + 1).at[inst.flat_links].add(
-        jnp.repeat(w_rate, H)) + bg
-    return ShareResult(eff=eff, offered=offered)
+    return ShareResult(eff=eff, offered=inst.link_sum(ctx, w_rate) + bg)
 
 
 def share_drr(ctx: EngineCtx, cfg, inst: InstView, tick) -> ShareResult:
@@ -357,25 +393,21 @@ def share_drr(ctx: EngineCtx, cfg, inst: InstView, tick) -> ShareResult:
     active instances an equal per-round quantum regardless of job, and the
     deficit left by rate-limited instances is redistributed to the still-
     hungry ones in a second round (two-round water-filling)."""
-    st, H, L = ctx.st, ctx.H, ctx.L
+    st = ctx.st
     w_rate = jnp.where(inst.active, inst.irate, 0.0)
     bg = background_load(ctx, tick)
-    act = inst.active.astype(jnp.float32)
-    n_act = jnp.zeros(L + 1).at[inst.flat_links].add(jnp.repeat(act, H))
+    n_act = inst.link_sum(ctx, inst.active.astype(jnp.float32))
     avail = jnp.maximum(st.cap - bg, 0.0)
     quantum = avail / jnp.maximum(n_act, 1.0)
-    take1 = jnp.minimum(w_rate, quantum[inst.iroute].min(axis=1))
-    used = jnp.zeros(L + 1).at[inst.flat_links].add(jnp.repeat(take1, H))
+    take1 = jnp.minimum(w_rate, inst.path_min(quantum))
+    used = inst.link_sum(ctx, take1)
     want = inst.active & (take1 < w_rate)
-    n_want = jnp.zeros(L + 1).at[inst.flat_links].add(
-        jnp.repeat(want.astype(jnp.float32), H))
+    n_want = inst.link_sum(ctx, want.astype(jnp.float32))
     bonus = jnp.maximum(avail - used, 0.0) / jnp.maximum(n_want, 1.0)
     take2 = jnp.where(want,
-                      jnp.minimum(w_rate - take1,
-                                  bonus[inst.iroute].min(axis=1)), 0.0)
-    offered = jnp.zeros(L + 1).at[inst.flat_links].add(
-        jnp.repeat(w_rate, H)) + bg
-    return ShareResult(eff=take1 + take2, offered=offered)
+                      jnp.minimum(w_rate - take1, inst.path_min(bonus)), 0.0)
+    return ShareResult(eff=take1 + take2,
+                       offered=inst.link_sum(ctx, w_rate) + bg)
 
 
 SHARE_POLICIES: dict[str, Callable[..., ShareResult]] = {
@@ -604,8 +636,42 @@ def stage_share(ctx: EngineCtx, cfg, inst: InstView, tick) -> ShareResult:
         lambda: base_fn(ctx, cfg, inst, tick))
 
 
+BACKENDS = ("xla", "pallas")
+
+
+def resolve_backend(cfg) -> str:
+    """The tick backend actually used for this config.
+
+    ``backend="pallas"`` fuses route-gather / bandwidth-share / queue-RED /
+    Symphony-scatter into the ``kernels/netsim_tick`` Pallas kernel.  The
+    kernel implements the ``proportional`` and ``pq`` share paths (plus the
+    traced ``pq_on`` gate); ``wfq``/``drr`` stay on the staged XLA path
+    behind this same dispatch.
+    """
+    be = getattr(cfg, "backend", "xla")
+    if be not in BACKENDS:
+        raise ValueError(f"unknown tick backend {be!r}; have {BACKENDS}")
+    if be == "pallas" and cfg.share_policy not in ("proportional", "pq"):
+        return "xla"
+    return be
+
+
 def engine_tick(ctx: EngineCtx, cfg, state: EngineState, tick):
-    """One tick: compose the stages.  Returns (state', metric sample)."""
+    """One tick: compose the stages.  Returns (state', metric sample).
+
+    Dispatches on ``cfg.backend`` (static, from :class:`SimStructure`):
+    ``"xla"`` runs the staged composition below; ``"pallas"`` routes the
+    hot stages through the fused ``kernels/netsim_tick`` kernel and keeps
+    this composition as its golden reference.
+    """
+    if resolve_backend(cfg) == "pallas":
+        from ...kernels.netsim_tick.ops import engine_tick_fused
+        return engine_tick_fused(ctx, cfg, state, tick)
+    return engine_tick_xla(ctx, cfg, state, tick)
+
+
+def engine_tick_xla(ctx: EngineCtx, cfg, state: EngineState, tick):
+    """The pure-XLA staged tick (the reference semantics of the engine)."""
     starts = stage_starts(ctx, state, tick)
     inst = instance_view(ctx, starts, state, cfg.mtu, cfg.per_step_ecmp)
     shr = stage_share(ctx, cfg, inst, tick)

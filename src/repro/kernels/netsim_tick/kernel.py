@@ -1,0 +1,299 @@
+"""Fused netsim tick hot path as a Pallas kernel.
+
+The staged XLA engine (`core/netsim/stages.py`) runs each hot stage of a
+tick — route gather, per-link scatter-add bandwidth sharing, queue/RED
+integration, Symphony per-(domain, job) scatter — as a separate XLA op
+with its own HBM round trip.  This kernel fuses them into one program:
+the per-instance view, both share classes, the link queues, and the
+Symphony state block updates are computed with everything resident
+on-chip, and only the tick's true inputs/outputs touch HBM.
+
+The stage functions stay the golden reference (`ref.py`): the kernel body
+replays their op sequence exactly, so in interpret mode the fused tick is
+**bit-for-bit** identical to the staged engine — the seed golden chain
+(Table-1 finish-tick traces) holds under ``backend="pallas"``.
+
+Share policies: ``proportional`` and ``pq`` are implemented in-kernel
+(both classes are computed and the traced ``pq_on`` gate selects, exactly
+like the XLA path's ``lax.cond``-under-vmap select); ``wfq``/``drr`` stay
+on the XLA path behind `stages.resolve_backend`.
+
+Segment reductions come in two flavors (``segsum=``):
+
+* ``"scatter"`` — `.at[].add/max/min`, the reference op sequence;
+  bitwise-equal to the staged engine (interpret mode).
+* ``"onehot"``  — dense one-hot contractions (MXU matmul for the adds,
+  masked row reductions for min/max).  Mosaic has no vector scatter, so
+  this is the shape a compiled TPU lowering takes; adds reassociate, so
+  it is allclose-not-bitwise vs the reference.
+
+Compiled (non-interpret) execution is untested on this repo's CPU-only
+CI — `ops.use_interpret` defaults to interpret mode on CPU hosts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.netsim.stages import WIRE_SEG, per_hop
+
+# stages.BIG as a Python int: the kernel body must not capture device
+# constants (pallas requires all array operands to be explicit inputs).
+_BIG = 2**30
+
+SEGSUM_MODES = ("scatter", "onehot")
+
+
+class TickOut(NamedTuple):
+    """Fused-kernel outputs: everything the XLA-side stages still need."""
+    iroute: jax.Array     # [FW, H]  selected per-instance routes
+    eff: jax.Array        # [FW]     delivered bytes/s per instance
+    offered: jax.Array    # [L+1]    offered load per link
+    q: jax.Array          # [L+1]    integrated queues
+    p_red: jax.Array      # [L+1]    RED marking profile
+    s_stepmin: jax.Array  # [DJ]     Symphony state block (post-update)
+    s_psnwin: jax.Array
+    s_alpha: jax.Array
+    s_cnt: jax.Array
+    s_cntop: jax.Array
+
+
+# ------------------------------------------------- segment reductions
+def _rows(n: int, m: int) -> jax.Array:
+    return jax.lax.broadcasted_iota(jnp.int32, (n, m), 0)
+
+
+def _segadd(base, idx, vals, mode):
+    """``base.at[idx].add(vals)``; dense mode uses a one-hot contraction
+    (MXU-friendly, reassociates the adds — allclose, not bitwise)."""
+    if mode == "scatter":
+        return base.at[idx].add(vals)
+    oh = _rows(base.shape[0], idx.shape[0]) == idx[None, :]
+    if jnp.issubdtype(vals.dtype, jnp.floating):
+        return base + jnp.dot(oh.astype(vals.dtype), vals,
+                              preferred_element_type=vals.dtype)
+    return base + jnp.where(oh, vals[None, :], 0).sum(axis=1)
+
+
+def _segmax(base, idx, vals, mode):
+    if mode == "scatter":
+        return base.at[idx].max(vals)
+    neutral = (jnp.finfo(vals.dtype).min
+               if jnp.issubdtype(vals.dtype, jnp.floating)
+               else jnp.iinfo(vals.dtype).min)
+    oh = _rows(base.shape[0], idx.shape[0]) == idx[None, :]
+    return jnp.maximum(base, jnp.where(oh, vals[None, :], neutral).max(axis=1))
+
+
+def _segmin(base, idx, vals, mode):
+    if mode == "scatter":
+        return base.at[idx].min(vals)
+    neutral = (jnp.finfo(vals.dtype).max
+               if jnp.issubdtype(vals.dtype, jnp.floating)
+               else jnp.iinfo(vals.dtype).max)
+    oh = _rows(base.shape[0], idx.shape[0]) == idx[None, :]
+    return jnp.minimum(base, jnp.where(oh, vals[None, :], neutral).min(axis=1))
+
+
+# ------------------------------------------------------- kernel body
+def _tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
+                 smin_ref, spsn_ref, salpha_ref, scnt_ref, scntop_ref,
+                 routes_ref, table_ref, npaths_ref, cap_ref, dom_ref,
+                 bgb_ref, bga_ref,
+                 job_ref, flow_ref, sps_ref, phase_ref, nph_ref, off_ref,
+                 chunk_ref, iscal_ref, fscal_ref,
+                 iroute_o, eff_o, offered_o, q_o, pred_o,
+                 smin_o, spsn_o, salpha_o, scnt_o, scntop_o,
+                 *, H, SEG, dt, mtu, per_step_ecmp, policy, segsum):
+    istep = step_ref[...]
+    isent = sent_ref[...]
+    irate = rate_ref[...]
+    inst_job = job_ref[...]
+    inst_flow = flow_ref[...]
+    sps = sps_ref[...]
+    phase = phase_ref[...]
+    nph = nph_ref[...]
+    off = off_ref[...]
+    cap = cap_ref[...]
+    link_dom = dom_ref[...]
+    chunk_sched = chunk_ref[...]
+    tick, seed = iscal_ref[0], iscal_ref[1]
+    bg_period, sym_win, pq_on = iscal_ref[2], iscal_ref[3], iscal_ref[4]
+    bg_duty = fscal_ref[0]
+    red_kmin, red_kmax, red_pmax = fscal_ref[1], fscal_ref[2], fscal_ref[3]
+    tau, n_sample, alpha_max = fscal_ref[4], fscal_ref[5], fscal_ref[6]
+    J = chunk_sched.shape[0]
+    DJ = smin_ref.shape[0]
+    L = cap.shape[0] - 1
+
+    # ---- instance view (stages.instance_view, on-chip)
+    iseg = (istep // sps) * nph + phase
+    ichunk = chunk_sched[inst_job, jnp.clip(iseg, 0, SEG - 1)]
+    iwire = iseg * WIRE_SEG + istep % sps + off
+    occupied = istep >= 0
+    retired = occupied & (istep < done_ref[...][inst_flow])
+    complete = occupied & (isent >= ichunk)
+    active = occupied & ~complete & ~retired
+    ipsn = isent / mtu
+
+    # ---- route selection (stages.select_routes)
+    if per_step_ecmp:
+        h = (inst_flow.astype(jnp.uint32) * jnp.uint32(2654435761)
+             + jnp.maximum(istep, 0).astype(jnp.uint32) * jnp.uint32(40503)
+             + (seed.astype(jnp.uint32) + 1) * jnp.uint32(2246822519))
+        h = (h ^ (h >> 13)) * jnp.uint32(2654435761)
+        h = h ^ (h >> 16)
+        n_p = npaths_ref[...][inst_flow].astype(jnp.uint32)
+        choice = (h % n_p).astype(jnp.int32)
+        iroute = table_ref[...][inst_flow, choice]
+    else:
+        iroute = routes_ref[...][inst_flow]
+    flat_links = iroute.reshape(-1)
+
+    def lsum(vals):
+        return _segadd(jnp.zeros(L + 1, jnp.float32), flat_links,
+                       per_hop(vals, H), segsum)
+
+    # ---- bandwidth sharing (stages.share_proportional / share_pq)
+    bg_on = (tick % bg_period).astype(jnp.float32) < \
+        bg_duty * bg_period.astype(jnp.float32)
+    bg = bgb_ref[...] + jnp.where(bg_on, bga_ref[...], 0.0)
+    w_rate = jnp.where(active, irate, 0.0)
+
+    off_p = lsum(w_rate) + bg
+    s_l = jnp.minimum(1.0, cap / jnp.maximum(off_p, 1.0))
+    eff_p = w_rate * s_l[iroute].min(axis=1)
+
+    job_min_wire = _segmin(jnp.full(J, _BIG, jnp.int32), inst_job,
+                           jnp.where(active, iwire, _BIG), segsum)
+    is_hi = active & (iwire <= job_min_wire[inst_job])
+    hi_rate = jnp.where(is_hi, irate, 0.0)
+    off_hi = lsum(hi_rate) + bg
+    s_hi = jnp.minimum(1.0, cap / jnp.maximum(off_hi, 1.0))
+    rem = jnp.maximum(cap - off_hi * s_hi, 0.0)
+    lo_rate = jnp.where(active & ~is_hi, irate, 0.0)
+    off_lo = lsum(lo_rate)
+    s_lo = rem / jnp.maximum(off_lo, 1.0)
+    share = jnp.where(is_hi[:, None], s_hi[iroute],
+                      jnp.minimum(1.0, s_lo[iroute]))
+    eff_q = w_rate * share.min(axis=1)
+    off_q = off_hi + off_lo
+
+    if policy == "pq":
+        eff, offered = eff_q, off_q
+    else:
+        gate = pq_on != 0
+        eff = jnp.where(gate, eff_q, eff_p)
+        offered = jnp.where(gate, off_q, off_p)
+
+    # ---- queues + RED (stages.stage_queues)
+    q = jnp.maximum(q_ref[...] + (offered - cap) * dt, 0.0)
+    q = q.at[L].set(0.0)
+    p_red = jnp.clip((q - red_kmin) / (red_kmax - red_kmin),
+                     0.0, 1.0) * red_pmax
+
+    # ---- Symphony per-(domain, job) scatter (stages.stage_symphony)
+    idom = link_dom[iroute]
+    dj = idom * J + inst_job[:, None]
+    djf = dj.reshape(-1)
+    sm = smin_ref[...][dj]
+    pkts = eff * dt / mtu
+    newly_done = active & (isent + eff * dt >= ichunk)
+
+    act4 = per_hop(active, H)
+    send4 = per_hop(active & (eff > 1.0), H)
+    done4 = per_hop(newly_done, H)
+    wire4 = per_hop(iwire, H)
+    psn4 = per_hop(ipsn + pkts, H)
+    pkts4 = per_hop(pkts, H)
+    sm4 = sm.reshape(-1)
+
+    cnt = _segadd(scnt_ref[...], djf, jnp.where(act4, pkts4, 0.0), segsum)
+    cntop = _segadd(scntop_ref[...], djf,
+                    jnp.where(act4 & (wire4 > sm4), pkts4, 0.0), segsum)
+    cand = _segmax(jnp.zeros(DJ, jnp.int32), djf,
+                   jnp.where(done4, wire4 + 1, 0), segsum)
+    cand = jnp.maximum(smin_ref[...], cand)
+    min_act = _segmin(jnp.full(DJ, _BIG, jnp.int32), djf,
+                      jnp.where(act4 & ~done4, wire4, _BIG), segsum)
+    stepmin = jnp.where(min_act < _BIG, jnp.minimum(cand, min_act), cand)
+    psnwin = _segmax(spsn_ref[...], djf,
+                     jnp.where(send4 & ~done4 & (wire4 == stepmin[djf]),
+                               psn4, 0.0), segsum)
+
+    sym_epoch = (tick % sym_win) == (sym_win - 1)
+    have = cnt > n_sample
+    exceed = cntop >= tau * cnt
+    alpha_new = jnp.clip(
+        salpha_ref[...] + jnp.where(exceed, 1.0, -1.0) * have,
+        1.0, alpha_max)
+
+    iroute_o[...] = iroute
+    eff_o[...] = eff
+    offered_o[...] = offered
+    q_o[...] = q
+    pred_o[...] = p_red
+    smin_o[...] = stepmin
+    spsn_o[...] = jnp.where(sym_epoch, 0.0, psnwin)
+    salpha_o[...] = jnp.where(sym_epoch, alpha_new, salpha_ref[...])
+    scnt_o[...] = jnp.where(sym_epoch, 0.0, cnt)
+    scntop_o[...] = jnp.where(sym_epoch, 0.0, cntop)
+
+
+# --------------------------------------------------------- entry point
+def netsim_tick(step_of, sent, rate, done_upto, q_prev,
+                s_stepmin, s_psnwin, s_alpha, s_cnt, s_cntop,
+                routes, path_table, n_paths, cap, link_dom, bg_base, bg_amp,
+                inst_job, inst_flow, sps_i, phase_i, nph_i, off_i,
+                chunk_sched, iscal, fscal, *,
+                dt: float, mtu: float, per_step_ecmp: bool,
+                policy: str = "proportional", segsum: str = "scatter",
+                interpret: bool = True) -> TickOut:
+    """One fused tick of the netsim hot path.
+
+    Per-instance state is flat ``[FW]``; link state ``[L+1]``; Symphony
+    state ``[DJ]``.  ``iscal = [tick, seed, bg_period_ticks,
+    sym_win_ticks, pq_on]`` (i32) and ``fscal = [bg_duty, red_kmin,
+    red_kmax, red_pmax, tau, n_sample, alpha_max]`` (f32) carry the
+    traced scalars; ``dt``/``mtu``/``per_step_ecmp``/``policy`` are
+    compile-time (from :class:`SimStructure`).
+    """
+    if policy not in ("proportional", "pq"):
+        raise ValueError(f"kernel share policy must be proportional|pq, "
+                         f"got {policy!r}")
+    if segsum not in SEGSUM_MODES:
+        raise ValueError(f"segsum must be one of {SEGSUM_MODES}, "
+                         f"got {segsum!r}")
+    FW = step_of.shape[0]
+    H = routes.shape[-1]
+    L1 = cap.shape[0]
+    DJ = s_stepmin.shape[0]
+    kernel = functools.partial(
+        _tick_kernel, H=H, SEG=int(chunk_sched.shape[-1]), dt=float(dt),
+        mtu=float(mtu), per_step_ecmp=bool(per_step_ecmp), policy=policy,
+        segsum=segsum)
+    outs = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((FW, H), jnp.int32),   # iroute
+            jax.ShapeDtypeStruct((FW,), jnp.float32),   # eff
+            jax.ShapeDtypeStruct((L1,), jnp.float32),   # offered
+            jax.ShapeDtypeStruct((L1,), jnp.float32),   # q
+            jax.ShapeDtypeStruct((L1,), jnp.float32),   # p_red
+            jax.ShapeDtypeStruct((DJ,), jnp.int32),     # s_stepmin
+            jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_psnwin
+            jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_alpha
+            jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_cnt
+            jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_cntop
+        ],
+        interpret=interpret,
+    )(step_of, sent, rate, done_upto, q_prev,
+      s_stepmin, s_psnwin, s_alpha, s_cnt, s_cntop,
+      routes, path_table, n_paths, cap, link_dom, bg_base, bg_amp,
+      inst_job, inst_flow, sps_i, phase_i, nph_i, off_i,
+      chunk_sched, iscal, fscal)
+    return TickOut(*outs)

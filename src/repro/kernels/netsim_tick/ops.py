@@ -1,0 +1,96 @@
+"""Engine-facing entry points for the fused netsim tick kernel.
+
+`stages.engine_tick` dispatches here when ``cfg.backend == "pallas"``:
+:func:`engine_tick_fused` runs the hot stages (instance view, route
+selection, bandwidth sharing, queue/RED, Symphony scatter) inside the
+Pallas kernel and composes the remaining cheap stages (marking, progress,
+rate control, segment barriers, metrics) around it on the XLA side —
+bit-for-bit equal to `stages.engine_tick_xla` in interpret mode.
+
+``REPRO_PALLAS_INTERPRET=0|1`` forces compiled/interpret execution;
+unset, interpret mode is chosen automatically on CPU hosts (Pallas TPU
+kernels cannot compile there; interpreted, the kernel traces into the
+same XLA program as the staged engine, so this is a correctness path —
+the perf win needs a real accelerator).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from ...core.netsim.stages import (EngineState, instance_view, stage_marking,
+                                   stage_metrics, stage_progress,
+                                   stage_rate_control, stage_segments,
+                                   stage_starts, static_pq_on)
+from .kernel import TickOut, netsim_tick
+
+
+def use_interpret() -> bool:
+    """Interpret-mode default: env override, else interpret on CPU."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env != "0"
+    return jax.default_backend() == "cpu"
+
+
+def kernel_policy(cfg) -> str:
+    """The in-kernel share policy for this config ("proportional"|"pq")."""
+    if cfg.share_policy == "pq" or static_pq_on(cfg):
+        return "pq"
+    return "proportional"
+
+
+def fused_tick(ctx, cfg, starts, state, tick, *,
+               segsum: str = "scatter",
+               interpret: bool | None = None) -> TickOut:
+    """Marshal engine state into the kernel's flat operands and run it."""
+    st = ctx.st
+    i32 = lambda v: jnp.asarray(v, jnp.int32)
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+    iscal = jnp.stack([i32(tick), i32(st.seed), i32(st.bg_period_ticks),
+                       i32(cfg.sym_win_ticks), i32(cfg.pq_on)])
+    fscal = jnp.stack([f32(st.bg_duty), f32(cfg.red_kmin), f32(cfg.red_kmax),
+                       f32(cfg.red_pmax), f32(cfg.sym.tau),
+                       f32(cfg.sym.n_sample), f32(cfg.sym.alpha_max)])
+    return netsim_tick(
+        starts.step_of.reshape(ctx.FW), starts.sent.reshape(ctx.FW),
+        starts.rate.reshape(ctx.FW), state.done_upto, state.q,
+        state.s_stepmin, state.s_psnwin, state.s_alpha,
+        state.s_cnt, state.s_cntop,
+        st.routes, st.path_table, st.n_paths, st.cap, st.link_dom,
+        st.bg_base, st.bg_amp,
+        ctx.inst_job, ctx.inst_flow, ctx.sps_i, ctx.phase_i, ctx.nph_i,
+        ctx.off_i, ctx.wl.chunk_sched, iscal, fscal,
+        dt=cfg.dt, mtu=cfg.mtu, per_step_ecmp=cfg.per_step_ecmp,
+        policy=kernel_policy(cfg), segsum=segsum,
+        interpret=use_interpret() if interpret is None else interpret)
+
+
+def engine_tick_fused(ctx, cfg, state: EngineState, tick):
+    """One tick with the hot stages fused; same contract as
+    `stages.engine_tick_xla`: returns ``(state', metric sample)``."""
+    starts = stage_starts(ctx, state, tick)
+    out = fused_tick(ctx, cfg, starts, state, tick)
+    inst = instance_view(ctx, starts, state, cfg.mtu, cfg.per_step_ecmp,
+                         iroute=out.iroute)
+    lam, _pkts, _sm = stage_marking(ctx, cfg, state, inst, out.p_red,
+                                    out.eff, starts.lam, tick)
+    sent, done_upto, finish, _newly_done = stage_progress(
+        ctx, cfg, state, inst, starts.step_of, out.eff, tick)
+    rate, target, alpha_cc, stage, lam, key = stage_rate_control(
+        ctx, cfg, starts, lam, state.key, tick)
+    seg_idx, seg_ready, job_finish = stage_segments(ctx, state, done_upto,
+                                                    tick)
+    sample = stage_metrics(ctx, inst, done_upto, out.eff, out.q, out.s_alpha)
+    new_state = EngineState(
+        next_step=starts.next_step, done_upto=done_upto, finish=finish,
+        step_of=starts.step_of, sent=sent, rate=rate, target=target,
+        alpha_cc=alpha_cc, stage=stage, lam=lam, q=out.q,
+        s_stepmin=out.s_stepmin, s_psnwin=out.s_psnwin, s_alpha=out.s_alpha,
+        s_cnt=out.s_cnt, s_cntop=out.s_cntop,
+        seg_idx=seg_idx, seg_ready=seg_ready, job_finish=job_finish,
+        key=key,
+    )
+    return new_state, sample

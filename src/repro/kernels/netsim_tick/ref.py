@@ -1,0 +1,35 @@
+"""Golden reference for the fused netsim tick kernel.
+
+The reference *is* the staged pure-XLA engine: the kernel body replays
+the stage functions' op sequence, so equivalence is asserted tick-for-
+tick (bitwise in ``segsum="scatter"`` interpret mode) against these.
+"""
+from __future__ import annotations
+
+from ...core.netsim.stages import (engine_tick_xla, instance_view,
+                                   stage_marking, stage_progress,
+                                   stage_queues, stage_share, stage_starts,
+                                   stage_symphony)
+from .kernel import TickOut
+
+
+def tick_ref(ctx, cfg, state, tick):
+    """Whole-tick oracle: the staged XLA engine, ``(state', sample)``."""
+    return engine_tick_xla(ctx, cfg, state, tick)
+
+
+def fused_outputs_ref(ctx, cfg, starts, state, tick) -> TickOut:
+    """Per-output oracle for `kernel.netsim_tick`: the same
+    :class:`TickOut` assembled from the individual stage functions."""
+    inst = instance_view(ctx, starts, state, cfg.mtu, cfg.per_step_ecmp)
+    shr = stage_share(ctx, cfg, inst, tick)
+    q, p_red = stage_queues(ctx, cfg, state.q, shr.offered)
+    _lam, pkts, sm = stage_marking(ctx, cfg, state, inst, p_red, shr.eff,
+                                   starts.lam, tick)
+    _sent, _done, _finish, newly_done = stage_progress(
+        ctx, cfg, state, inst, starts.step_of, shr.eff, tick)
+    stepmin, s_psnwin, s_alpha, s_cnt, s_cntop = stage_symphony(
+        ctx, cfg, state, inst, sm, pkts, newly_done, shr.eff, tick)
+    return TickOut(iroute=inst.iroute, eff=shr.eff, offered=shr.offered,
+                   q=q, p_red=p_red, s_stepmin=stepmin, s_psnwin=s_psnwin,
+                   s_alpha=s_alpha, s_cnt=s_cnt, s_cntop=s_cntop)

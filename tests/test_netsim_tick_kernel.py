@@ -1,0 +1,179 @@
+"""Equivalence tests for the fused ``kernels/netsim_tick`` Pallas kernel.
+
+The staged XLA engine is the golden reference: in interpret mode with
+``segsum="scatter"`` the kernel must match it **bit-for-bit**, both
+per-output on single ticks and tick-for-tick through whole runs — the
+seed golden chain (Table-1 finish-tick constants) must hold unchanged
+under ``backend="pallas"``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.netsim import (SimParams, WorkloadBuilder, build_static,
+                               make_leaf_spine, simulate, simulate_grid)
+from repro.core.netsim.simulator import wl_arrays
+from repro.core.netsim.stages import (engine_tick, engine_tick_xla,
+                                      init_state, make_ctx, resolve_backend,
+                                      stage_starts)
+from repro.kernels.netsim_tick import (fused_outputs_ref, fused_tick,
+                                       engine_tick_fused)
+
+# Same constants as tests/test_netsim_engine.py: captured from the seed
+# engine on the Table-1 scenario.  The pallas backend must reproduce them.
+GOLDEN_JOB = {"ecmp_base": 10757, "ecmp_sym": 7900,
+              "balanced_sym": 2239, "ecmp_pq": 10303}
+
+
+def _table1():
+    topo = make_leaf_spine(32, 4, 4)
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(32)), ring_size=8, chunk_bytes=1e6,
+                   passes=2, barrier=False)
+    return topo, b.build()
+
+
+def _small():
+    topo = make_leaf_spine(8, 2, 2)
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(8)), ring_size=4, chunk_bytes=2e5,
+                   passes=1, barrier=False)
+    return topo, b.build()
+
+
+def _assert_results_equal(a, b, what):
+    for f in a._fields:
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), f"{what}: {f}"
+
+
+# ------------------------------------------------- single-tick, per-output
+@pytest.mark.parametrize("variant", [
+    dict(), dict(sym_on=True), dict(pq_on=True), dict(share_policy="pq")])
+def test_kernel_outputs_bitwise_vs_stage_oracle(variant):
+    """Every kernel output equals the stage-function oracle, bitwise, on a
+    nontrivial mid-run state — including a sym-window epoch tick."""
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=100, window=8, **variant)
+    st = build_static(topo, wl, "ecmp", seed=3, dt=cfg.dt, deploy=cfg.deploy)
+    ctx = make_ctx(st, wl_arrays(wl, cfg.dt), cfg.window)
+    state = init_state(ctx, jax.random.PRNGKey(0))
+    # Both sides jitted: the kernel body always compiles as one XLA
+    # computation, and an eager (op-by-op) oracle loses bitwise equality
+    # to CPU fusion's FMA contraction.  Compiled-vs-compiled is the
+    # configuration the engine actually runs in (everything under scan).
+    run_kernel = jax.jit(lambda s, st_, t: fused_tick(ctx, cfg, s, st_, t))
+    run_ref = jax.jit(
+        lambda s, st_, t: fused_outputs_ref(ctx, cfg, s, st_, t))
+    # ticks 0..29 cover cold start, active sharing, and three epoch
+    # boundaries (sym_win_ticks=10: ticks 9, 19, 29)
+    for tick in range(30):
+        starts = stage_starts(ctx, state, tick)
+        out = run_kernel(starts, state, jnp.int32(tick))
+        ref = run_ref(starts, state, jnp.int32(tick))
+        for f in out._fields:
+            assert np.array_equal(np.asarray(getattr(out, f)),
+                                  np.asarray(getattr(ref, f))), \
+                f"tick {tick}: {f}"
+        state, _ = engine_tick_xla(ctx, cfg, state, tick)
+
+
+def test_kernel_onehot_segsum_allclose():
+    """The dense one-hot segsum mode (the compiled-TPU shape of the
+    reductions) reassociates adds: allclose, and int outputs exact."""
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=100, window=8, sym_on=True)
+    st = build_static(topo, wl, "ecmp", seed=3, dt=cfg.dt, deploy=cfg.deploy)
+    ctx = make_ctx(st, wl_arrays(wl, cfg.dt), cfg.window)
+    state = init_state(ctx, jax.random.PRNGKey(0))
+    scatter = jax.jit(
+        lambda s, st_, t: fused_tick(ctx, cfg, s, st_, t, segsum="scatter"))
+    onehot = jax.jit(
+        lambda s, st_, t: fused_tick(ctx, cfg, s, st_, t, segsum="onehot"))
+    for tick in range(12):
+        starts = stage_starts(ctx, state, tick)
+        a = scatter(starts, state, jnp.int32(tick))
+        b = onehot(starts, state, jnp.int32(tick))
+        for f in a._fields:
+            x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+            if x.dtype.kind == "i":
+                assert np.array_equal(x, y), f"tick {tick}: {f}"
+            else:
+                np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-5,
+                                           err_msg=f"tick {tick}: {f}")
+        state, _ = engine_tick_xla(ctx, cfg, state, tick)
+
+
+# ------------------------------------------------ whole-run, tick-for-tick
+@pytest.mark.parametrize("variant", [
+    dict(), dict(sym_on=True), dict(pq_on=True), dict(share_policy="pq")])
+def test_backend_pallas_matches_xla_run(variant):
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=500, window=16, **variant)
+    x = simulate(topo, wl, cfg, routing="ecmp", seed=3)
+    p = simulate(topo, wl, cfg._replace(backend="pallas"), routing="ecmp",
+                 seed=3)
+    _assert_results_equal(x, p, f"pallas vs xla {variant}")
+
+
+def test_backend_pallas_grid_matches_xla_grid():
+    """The fused tick composes with the grid executor: knob lanes (sym and
+    pq gates toggled) stay bitwise-equal to the XLA grid."""
+    topo, wl = _small()
+    base = SimParams(n_ticks=300, window=16)
+    pts = [base, base._replace(sym_on=True), base._replace(pq_on=True)]
+    x = simulate_grid(topo, wl, base.structure(),
+                      [p.knobs() for p in pts], seeds=(0, 1))
+    p = simulate_grid(topo, wl, base._replace(backend="pallas").structure(),
+                      [p.knobs() for p in pts], seeds=(0, 1))
+    _assert_results_equal(x, p, "pallas grid vs xla grid")
+
+
+# -------------------------------------------------- dispatch and fallback
+def test_wfq_drr_fall_back_to_xla_path():
+    for policy in ("wfq", "drr"):
+        cfg = SimParams(share_policy=policy, backend="pallas")
+        assert resolve_backend(cfg) == "xla"
+        topo, wl = _small()
+        run = lambda c: simulate(topo, wl, c, routing="ecmp", seed=3)
+        _assert_results_equal(
+            run(SimParams(n_ticks=200, window=8, share_policy=policy)),
+            run(SimParams(n_ticks=200, window=8, share_policy=policy,
+                          backend="pallas")),
+            f"{policy} fallback")
+    assert resolve_backend(SimParams(backend="pallas")) == "pallas"
+    assert resolve_backend(SimParams()) == "xla"
+
+
+def test_unknown_backend_rejected():
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=100, window=8, backend="bogus")
+    with pytest.raises(ValueError, match="backend"):
+        simulate(topo, wl, cfg, routing="ecmp", seed=0)
+    with pytest.raises(ValueError, match="backend"):
+        simulate_grid(topo, wl, cfg.structure(), [cfg.knobs()])
+
+
+# --------------------------------------------------------- golden chain
+def test_golden_table1_pallas():
+    """Acceptance: the pallas backend reproduces the seed golden finish
+    ticks on Table 1 (ecmp, sym off/on) — the chain stays bit-for-bit."""
+    topo, wl = _table1()
+    cfg = SimParams(n_ticks=20_000, window=64, backend="pallas")
+    base = simulate(topo, wl, cfg, routing="ecmp", seed=3)
+    assert int(base.job_finish_ticks[0]) == GOLDEN_JOB["ecmp_base"]
+    sym = simulate(topo, wl, cfg._replace(sym_on=True), routing="ecmp",
+                   seed=3)
+    assert int(sym.job_finish_ticks[0]) == GOLDEN_JOB["ecmp_sym"]
+
+
+@pytest.mark.slow
+def test_golden_table1_pallas_balanced_and_pq():
+    topo, wl = _table1()
+    cfg = SimParams(n_ticks=20_000, window=64, backend="pallas")
+    bal = simulate(topo, wl, cfg._replace(sym_on=True), routing="balanced",
+                   seed=3)
+    assert int(bal.job_finish_ticks[0]) == GOLDEN_JOB["balanced_sym"]
+    pq = simulate(topo, wl, cfg._replace(pq_on=True), routing="ecmp", seed=3)
+    assert int(pq.job_finish_ticks[0]) == GOLDEN_JOB["ecmp_pq"]
