@@ -35,8 +35,9 @@ import numpy as np
 
 from repro.core.netsim import (SimParams, Topology, Workload, WorkloadBuilder,
                                grid_from_params, make_fat_tree,
-                               make_leaf_spine, metrics, scale_for_hosts,
-                               simulate, simulate_grid, simulate_seeds)
+                               make_leaf_spine, metrics, resolve_grid_mesh,
+                               scale_for_hosts, simulate, simulate_grid,
+                               simulate_seeds)
 from repro.core.netsim.topology import DEFAULT_LINK_BPS as LINK_BPS
 
 CACHE = Path(__file__).resolve().parent / ".cache.json"
@@ -44,7 +45,29 @@ QUICK = os.environ.get("BENCH_QUICK", "0") != "0"
 
 # Bumped whenever the cache key scheme or result layout changes; older
 # cache files are discarded wholesale instead of serving stale entries.
-CACHE_SCHEMA = 2
+CACHE_SCHEMA = 3
+
+
+def grid_devices():
+    """Default multi-device dispatch for the benchmark layer, from the
+    ``BENCH_DEVICES`` env var: ``"auto"`` = all local devices, an integer
+    = that many, unset/empty/"1" = single-device dispatch (None)."""
+    val = os.environ.get("BENCH_DEVICES", "").strip()
+    if not val or val == "1":
+        return None
+    return "auto" if val == "auto" else int(val)
+
+
+def device_fingerprint() -> str:
+    """Backend + device/mesh configuration a result was produced under.
+
+    Folded into every ``cached()`` key: single- and multi-device runs of
+    the same scenario measure different dispatch paths (and wall clocks),
+    so they must not collide in the result cache."""
+    dev = grid_devices()
+    mesh = resolve_grid_mesh(devices=dev)
+    used = 1 if mesh is None else int(mesh.devices.size)
+    return f"{jax.default_backend()}:{jax.device_count()}:grid{used}"
 
 
 def _config_hash(config) -> str:
@@ -56,9 +79,10 @@ def cached(name: str, fn, config=None):
     """Memoize a benchmark result in ``.cache.json``.
 
     The key folds in a hash of ``config`` — the overrides/sweep values the
-    run depends on — so re-running a scenario with different parameters
-    (or after a registry change, if the caller passes its build config)
-    misses the cache instead of silently returning stale JSON.
+    run depends on — plus the device/mesh fingerprint, so re-running a
+    scenario with different parameters or on a different device
+    configuration misses the cache instead of silently returning stale
+    JSON.
     """
     cache = {}
     if CACHE.exists():
@@ -66,6 +90,7 @@ def cached(name: str, fn, config=None):
         if data.get("__schema__") == CACHE_SCHEMA:
             cache = data
     key = f"{name}{'@' + _config_hash(config) if config is not None else ''}" \
+          f"::{device_fingerprint()}" \
           f"{'::quick' if QUICK else ''}"
     if key in cache:
         return cache[key]
@@ -167,31 +192,39 @@ def sweep_axes_for(name: str) -> dict[str, tuple]:
 
 
 def run_grid(topo, wl, cfgs: Sequence[SimParams], seeds, routing="ecmp",
-             chunk_knobs: int | None = None, **bg):
+             chunk_knobs: int | None = None, devices="env", mesh=None, **bg):
     """Run a knob grid through the one-compile batched executor.
+
+    ``devices``/``mesh`` shard the grid's lane axis across a 1-D device
+    mesh (see ``simulate_grid``); the default ``"env"`` defers to the
+    ``BENCH_DEVICES`` env var (unset = single-device dispatch).
 
     Returns a SimResult with leading ``[K, S]`` axes, K = len(cfgs).
     """
+    if devices == "env":
+        devices = grid_devices()
     struct, knobs = grid_from_params(list(cfgs))
     res = simulate_grid(topo, wl, struct, knobs, seeds, routing=routing,
-                        chunk_knobs=chunk_knobs, **bg)
+                        chunk_knobs=chunk_knobs, devices=devices, mesh=mesh,
+                        **bg)
     return jax.block_until_ready(res)
 
 
 def run_scenario_grid(name: str, axes: dict[str, Sequence] | None = None,
                       seeds=(0,), chunk_knobs: int | None = None,
-                      **overrides):
+                      devices="env", mesh=None, **overrides):
     """Build a registered scenario and sweep its knob axes in one compile.
 
-    ``axes`` defaults to the scenario's registered sweep axes.  Returns
-    ``(built, cfgs, result)`` where ``cfgs[i]`` describes grid point i and
+    ``axes`` defaults to the scenario's registered sweep axes; ``devices``
+    / ``mesh`` shard the grid lanes across devices.  Returns ``(built,
+    cfgs, result)`` where ``cfgs[i]`` describes grid point i and
     ``result`` carries ``[K, S]`` leading axes.
     """
     built = build_scenario(name, **overrides)
     axes = sweep_axes_for(name) if axes is None else axes
     cfgs = knob_grid(built.cfg, axes)
     res = run_grid(built.topo, built.wl, cfgs, seeds, routing=built.routing,
-                   chunk_knobs=chunk_knobs)
+                   chunk_knobs=chunk_knobs, devices=devices, mesh=mesh)
     return built, cfgs, res
 
 
@@ -342,6 +375,52 @@ def _fat_tree_hd(n_pods: int = 2, tors_per_pod: int = 2,
     return Built(topo, wl, _horizon_cfg(wl, horizon_mult, sym_on=sym))
 
 
+def multipod_topo(n_hosts: int, hosts_per_tor: int = 8, tors_per_pod: int = 4,
+                  spines_per_pod: int = 4, n_cores: int = 8,
+                  core_oversubscription: float = 2.0) -> Topology:
+    """3-tier multi-pod FatTree scaled to ``n_hosts`` (32 hosts/pod by
+    default: 128 -> 4 pods, 256 -> 8, 512 -> 16), with a 1:2 core tier
+    matching the paper's oversubscribed multi-pod interconnects (§4.1)."""
+    per_pod = hosts_per_tor * tors_per_pod
+    if n_hosts % per_pod:
+        raise ValueError(f"hosts ({n_hosts}) must divide evenly over "
+                         f"{per_pod}-host pods")
+    return make_fat_tree(n_hosts // per_pod, tors_per_pod, spines_per_pod,
+                         hosts_per_tor, n_cores,
+                         core_oversubscription=core_oversubscription)
+
+
+@scenario("fat_tree_multipod",
+          "128-512 host 3-tier multi-pod FatTree, inter-pod interleaved "
+          "rings — the Table-2/Fig-8-at-scale sweep fabric",
+          sweeps=(
+              SweepAxis("sym", (False, True)),
+              SweepAxis("tau", (0.1, 0.25, 0.5), quick=(0.25,)),
+              SweepAxis("k", (1e-3, 1e-2, 1e-1), quick=(1e-2,)),
+              SweepAxis("t_win_ticks", (5, 10, 20), quick=(5,)),
+          ))
+def _fat_tree_multipod(n_hosts: int = 128, ring: int = 32,
+                       chunk: float = 2e6, passes: int = 1,
+                       barrier: bool = False, horizon_mult: float = 4.0,
+                       sym: bool = False, deploy: str = "tor",
+                       core_oversubscription: float = 2.0,
+                       coarse: bool = True) -> Built:
+    """The 512-host-class sweep scenario: parallel ``ring``-size rings
+    striped across pods, coarse 20us ticks by default (control-loop
+    windows rescaled to keep T_win = 100us / 40us CC epochs) so dense
+    knob grids stay affordable at 512 hosts."""
+    topo = multipod_topo(n_hosts,
+                         core_oversubscription=core_oversubscription)
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(n_hosts)), ring_size=ring,
+                   chunk_bytes=chunk, passes=passes, barrier=barrier)
+    wl = b.build()
+    extra = dict(sym_win_ticks=5, cc_epoch_ticks=2) if coarse else {}
+    cfg = _horizon_cfg(wl, horizon_mult, dt=20e-6 if coarse else 10e-6,
+                       sym_on=sym, deploy=deploy, **extra)
+    return Built(topo, wl, cfg)
+
+
 @scenario("hierarchical_tor",
           "Hierarchical allreduce: intra-ToR rings + inter-ToR leader ring")
 def _hierarchical_tor(n_hosts: int = 32, n_tors: int = 4, n_spines: int = 4,
@@ -398,7 +477,10 @@ def seeds_for(n_full: int, n_quick: int = 3):
     return list(range(n_quick if QUICK else n_full))
 
 
-def run_seeds(topo, wl, cfg, routing, seeds, **bg):
-    """Batched multi-seed run (vmap)."""
-    res = simulate_seeds(topo, wl, cfg, routing, seeds, **bg)
+def run_seeds(topo, wl, cfg, routing, seeds, devices="env", mesh=None, **bg):
+    """Batched multi-seed run (vmap), seed lanes sharded like grid lanes."""
+    if devices == "env":
+        devices = grid_devices()
+    res = simulate_seeds(topo, wl, cfg, routing, seeds, devices=devices,
+                        mesh=mesh, **bg)
     return jax.block_until_ready(res)

@@ -10,9 +10,10 @@ gates), so the whole figure — 3 variants x all seeds — dispatches through
 """
 import numpy as np
 
-from repro.core.netsim import metrics
+from repro.core.netsim import metrics, resolve_grid_mesh
 
-from .common import QUICK, build_scenario, cached, run_grid, seeds_for
+from .common import (QUICK, build_scenario, cached, grid_devices, run_grid,
+                     seeds_for)
 
 # single source of truth for the run parameters AND the cache key: editing
 # one without the other is exactly the stale-cache bug cached() guards
@@ -50,6 +51,10 @@ def run():
             out[f"reduction_vs_{other}"] = round(
                 1 - out["symphony"]["cct_median_s"] /
                 out[other]["cct_median_s"], 3)
+    # record which mesh produced the figure — single- and multi-device
+    # dispatches are cached separately (device_fingerprint in the key)
+    mesh = resolve_grid_mesh(devices=grid_devices())
+    out["grid_device_count"] = 1 if mesh is None else int(mesh.devices.size)
     return out
 
 

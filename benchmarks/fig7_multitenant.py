@@ -4,12 +4,13 @@
 aggregate throughput high and shrinks the final-step span (tail).
 (c) random job arrivals at mixed scales: improvement grows with job scale.
 """
+import jax
 import numpy as np
 
 from repro.core.netsim import WorkloadBuilder, metrics
 
 from .common import (QUICK, build_scenario, cached, default_params,
-                     run_seeds, seeds_for, table1_topo)
+                     run_grid, seeds_for, table1_topo)
 
 
 def run():
@@ -20,9 +21,14 @@ def run():
     topo, wl, base_cfg, _ = build_scenario("multi_tenant_pair",
                                            n_hosts=hosts, passes=passes)
     seeds = seeds_for(10, 3)
-    for name, cfg in [("baseline", base_cfg),
-                      ("symphony", base_cfg._replace(sym_on=True))]:
-        res = run_seeds(topo, wl, cfg, "ecmp", seeds)
+    variants = [("baseline", base_cfg),
+                ("symphony", base_cfg._replace(sym_on=True))]
+    # sym_on is a RuntimeKnob: both variants dispatch as ONE 2-point grid
+    # (one compile, lanes sharded across devices when configured); each
+    # variant's [S, ...] slice then feeds the unchanged metrics code.
+    gres = run_grid(topo, wl, [c for _, c in variants], seeds, "ecmp")
+    for i, (name, cfg) in enumerate(variants):
+        res = jax.tree.map(lambda x: x[i], gres)
         cct = metrics.cct_seconds(res, wl, cfg)
         spans = [metrics.flow_span_seconds(res, wl, cfg, job=j)
                  for j in (0, 1)]
@@ -50,10 +56,9 @@ def run():
         horizon = int(0.9 / 10e-6)
         cfg_b = default_params(horizon)
         cfg_s = default_params(horizon, sym=True)
-        rb = run_seeds(topo, wl2, cfg_b, "ecmp", seeds)
-        rs = run_seeds(topo, wl2, cfg_s, "ecmp", seeds)
-        jb = metrics.cct_seconds(rb, wl2, cfg_b)[:, 0]
-        js = metrics.cct_seconds(rs, wl2, cfg_s)[:, 0]
+        res2 = run_grid(topo, wl2, [cfg_b, cfg_s], seeds, "ecmp")
+        cct2 = metrics.cct_seconds(res2, wl2, cfg_b)[..., 0]   # [2, S]
+        jb, js = cct2[0], cct2[1]
         out[f"scale_{n}"] = {
             "jct_improvement": round(1 - np.nanmedian(js) / np.nanmedian(jb), 4)
             if np.isfinite(np.nanmedian(jb)) else None}

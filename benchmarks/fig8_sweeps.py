@@ -13,11 +13,12 @@ per point but still reuse one engine compilation per structure.
 """
 import numpy as np
 
-from repro.core.netsim import metrics
+from repro.core.netsim import core_trace_count, metrics, resolve_grid_mesh
 from repro.core.symphony import SymphonyParams
 
-from .common import (QUICK, build_scenario, cached, default_params, run_grid,
-                     seeds_for, sweep_axes_for, table1_topo, table1_workload)
+from .common import (QUICK, build_scenario, cached, default_params,
+                     run_scenario_grid, run_grid, seeds_for, sweep_axes_for,
+                     table1_topo, table1_workload)
 
 # single source of truth for the sweep parameters and the cache key
 CONFIG = dict(hosts=32 if QUICK else 64,
@@ -97,3 +98,32 @@ def run():
 def bench():
     return cached("fig8_sweeps", run,
                   config=CONFIG | {"k_axis": sweep_axes_for("table1_2d")["k"]})
+
+
+def sharded_smoke(n_hosts: int = 128, seeds=(0,)) -> dict:
+    """Fig-8-at-scale smoke for CI: the registry-driven multipod sweep at
+    ``n_hosts`` on the 3-tier FatTree, lanes sharded over all local
+    devices (force a CPU mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+    Returns the compile count (must be 1), the device count actually
+    used, and the per-point median CCTs, so the CI gate exercises the
+    sharded dispatch end-to-end on every PR."""
+    mesh = resolve_grid_mesh(devices="auto")
+    c0 = core_trace_count()
+    # horizon 6x lockstep ideal: ECMP collisions on the oversubscribed
+    # core tier stretch the tail to ~5.2x ideal at 128 hosts
+    built, cfgs, res = run_scenario_grid(
+        "fat_tree_multipod", seeds=list(seeds), devices="auto",
+        n_hosts=n_hosts, ring=8, chunk=512e3, horizon_mult=6.0)
+    compiles = core_trace_count() - c0
+    med = _median_cct(res, built.wl, built.cfg)
+    return {
+        "n_hosts": n_hosts,
+        "grid_points": len(cfgs),
+        "device_count": 1 if mesh is None else int(mesh.devices.size),
+        "grid_compiles": compiles,
+        "cct_median_s": [round(float(m), 4) if np.isfinite(m) else None
+                         for m in med],
+        "n_unfinished": int(np.isnan(np.asarray(med)).sum()),
+    }

@@ -156,22 +156,29 @@ def measure_ring(dtype="float32", mode="ring", channels=4):
         flags.set_ring_sync_dtype("float32")
 
 
-def measure_netsim_grid(axes: dict, seeds=4):
+def measure_netsim_grid(axes: dict, seeds=4, devices="env"):
     """Hillclimb Symphony knobs on the Table-1 scenario via simulate_grid.
 
     Returns the best grid point by median CCT plus the grid's wall time
     and engine compile count (must be 1: the grid is a single program).
+    ``devices`` shards the candidate lanes across a device mesh (default
+    defers to BENCH_DEVICES; this module forces 512 virtual CPU devices,
+    so ``devices="auto"`` spreads the grid wide).
     """
     import numpy as np
-    from benchmarks.common import (build_scenario, knob_combos, knob_grid,
-                                   run_grid)
-    from repro.core.netsim import core_trace_count, metrics
+    from benchmarks.common import (build_scenario, grid_devices, knob_combos,
+                                   knob_grid, run_grid)
+    from repro.core.netsim import (core_trace_count, metrics,
+                                   resolve_grid_mesh)
 
     topo, wl, base, routing = build_scenario("table1_ring", passes=2)
     cfgs = knob_grid(base._replace(sym_on=True), axes)
+    mesh = resolve_grid_mesh(
+        devices=grid_devices() if devices == "env" else devices)
     c0 = core_trace_count()
     t0 = time.time()
-    res = run_grid(topo, wl, cfgs, list(range(seeds)), routing)
+    res = run_grid(topo, wl, cfgs, list(range(seeds)), routing,
+                   devices=devices)
     wall = time.time() - t0
     compiles = core_trace_count() - c0
     cct = metrics.cct_seconds(res, wl, base)[..., 0]      # [K, S]
@@ -182,6 +189,7 @@ def measure_netsim_grid(axes: dict, seeds=4):
     combos = knob_combos(axes)    # same row-major order as knob_grid
     return {
         "grid_points": len(cfgs), "seeds": seeds,
+        "device_count": 1 if mesh is None else int(mesh.devices.size),
         "grid_wall_s": round(wall, 1), "engine_compiles": compiles,
         "best": dict(zip(axis_names, combos[best])) |
                 {"cct_median_s": round(float(med[best]), 4)},

@@ -38,15 +38,16 @@ from pathlib import Path
 
 import jax
 
-from repro.core.netsim import (core_trace_count, grid_from_params, simulate,
-                               simulate_grid, simulate_seeds)
+from repro.core.netsim import (core_trace_count, grid_from_params,
+                               resolve_grid_mesh, simulate, simulate_grid,
+                               simulate_seeds)
 from repro.core.netsim.simulator import (_core_impl, _resolve_routing,
                                          build_static, wl_arrays)
 
 from .common import QUICK, build_scenario, cached, default_params, knob_grid
 
 BENCH_FILE = Path(__file__).resolve().parents[1] / "BENCH_netsim.json"
-BENCH_SCHEMA = 1
+BENCH_SCHEMA = 2
 
 # single source of truth for the benchmark parameters and the cache key
 CONFIG = dict(n_ticks=2_000 if QUICK else 30_000,
@@ -162,6 +163,27 @@ def run():
     pp_comp *= scale_k
     pp_wall = pp_comp + pp_run * scale_k * len(grid_seeds)
     backends = backend_compare(topo, wl, cfg)
+
+    # ---- multi-device grid dispatch: the same grid sharded across all
+    # local devices (only measurable when >1 device is visible — force a
+    # CPU mesh with XLA_FLAGS=--xla_force_host_platform_device_count=8).
+    # Both walls include their single compile, so the ratio is honest.
+    lanes = len(cfgs) * len(grid_seeds)
+    mesh = resolve_grid_mesh(devices="auto")
+    n_dev = 1 if mesh is None else int(mesh.devices.size)
+    multi = {"grid_devices": n_dev}
+    if mesh is not None:
+        t0 = time.time()
+        jax.block_until_ready(
+            simulate_grid(topo, wl, struct, knobs, grid_seeds,
+                          routing="ecmp", chunk_knobs=8, devices="auto"))
+        multi_wall = time.time() - t0
+        multi.update({
+            "grid_multi_wall_s": round(multi_wall, 2),
+            "grid_speedup_multi_device": round(grid_wall / multi_wall, 2),
+            "ticks_per_s_grid_per_device_multi": round(
+                lanes * n_ticks / multi_wall / n_dev),
+        })
     return {
         "backends": backends,
         "compile_plus_run_s": round(cold, 2),
@@ -173,14 +195,21 @@ def run():
         "vmap_speedup": round(len(seeds) * warm / batch, 2),
         "grid_points": len(cfgs),
         "grid_seeds": len(grid_seeds),
+        "grid_lanes": lanes,
         "grid_wall_s": round(grid_wall, 2),
         "grid_compiles": grid_compiles,
+        # each lane advances n_ticks in grid_wall seconds; "total" is the
+        # aggregate simulation throughput of the whole grid dispatch
+        "ticks_per_s_grid_lane": round(n_ticks / grid_wall, 1),
+        "ticks_per_s_grid_total": round(lanes * n_ticks / grid_wall),
+        "ticks_per_s_grid_per_device": round(lanes * n_ticks / grid_wall),
         "per_point_wall_s": round(pp_wall, 2),
         "per_point_compile_s": round(pp_comp, 2),
         "per_point_extrapolated": len(ref_cfgs) != len(cfgs),
         "grid_speedup_vs_per_point": round(pp_wall / grid_wall, 2),
         "compile_speedup_vs_per_point": round(
             pp_comp / max(grid_compile_s, 1e-9), 2),
+        **multi,
     }
 
 
@@ -202,13 +231,20 @@ def write_bench(result) -> dict:
         if data.get("schema") != BENCH_SCHEMA:
             data = {}
     data["schema"] = BENCH_SCHEMA
+    mesh = resolve_grid_mesh(devices="auto")
+    n_dev = 1 if mesh is None else int(mesh.devices.size)
     data[_mode()] = {
         "config": {k: list(v) if isinstance(v, tuple) else v
                    for k, v in CONFIG.items()},
+        # device_count/mesh_shape make BENCH entries from different
+        # topologies (1-device CI VM vs forced-8 CPU mesh vs accelerator
+        # pods) comparable instead of silently conflated
         "host": {"cpu_count": os.cpu_count(),
                  "machine": platform.machine(),
                  "jax": jax.__version__,
-                 "jax_backend": jax.default_backend()},
+                 "jax_backend": jax.default_backend(),
+                 "device_count": jax.device_count(),
+                 "mesh_shape": [n_dev]},
         "result": result,
     }
     BENCH_FILE.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
@@ -216,9 +252,12 @@ def write_bench(result) -> dict:
 
 
 # Ticks/sec metrics gated by --check, as (path into the result dict).
+# grid_speedup_multi_device only exists when >1 device was visible for
+# BOTH the committed and the fresh run; the check loop skips it otherwise.
 _GATED = (("ticks_per_s_single",), ("ticks_per_s_vmap",),
           ("backends", "xla", "ticks_per_s"),
-          ("backends", "pallas", "ticks_per_s"))
+          ("backends", "pallas", "ticks_per_s"),
+          ("grid_speedup_multi_device",))
 # Warn below 0.5x committed: CI runs on shared 2-core VMs whose absolute
 # throughput swings widely run-to-run, so the gate is loose and warn-only —
 # it catches order-of-magnitude regressions, not percent-level ones.
@@ -244,6 +283,9 @@ def check() -> int:
             for k in path:
                 want, have = want[k], have[k]
         except KeyError:
+            continue
+        if not all(isinstance(v, (int, float)) for v in (want, have)) \
+                or want <= 0:
             continue
         label = ".".join(path)
         line = (f"  {label}: {have} vs committed {want} "

@@ -1,8 +1,9 @@
 from . import metrics, params, stages, topology, workload
 from .params import (EngineParams, RuntimeKnobs, SimParams, SimStructure,
                      grid_from_params, merge_params, stack_knobs)
-from .simulator import (SimResult, Static, build_static, core_trace_count,
-                        link_domains, simulate, simulate_core, simulate_grid,
+from .simulator import (GRID_AXIS, SimResult, Static, build_static,
+                        core_trace_count, link_domains, resolve_grid_mesh,
+                        simulate, simulate_core, simulate_grid,
                         simulate_seeds)
 from .stages import SHARE_POLICIES, EngineCtx, EngineState
 from .topology import (FatTree, LeafSpine, Topology, make_fat_tree,
@@ -14,6 +15,7 @@ __all__ = [
     "grid_from_params", "merge_params", "stack_knobs",
     "SimResult", "Static", "simulate", "simulate_core", "simulate_seeds",
     "simulate_grid", "core_trace_count", "build_static", "link_domains",
+    "resolve_grid_mesh", "GRID_AXIS",
     "SHARE_POLICIES", "EngineCtx", "EngineState",
     "Topology", "LeafSpine", "FatTree", "make_leaf_spine", "make_fat_tree",
     "scale_for_hosts",

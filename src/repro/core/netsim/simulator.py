@@ -31,6 +31,18 @@ Entry points
   vmap over knob points x seeds, chunked along the knob axis to bound
   memory.  Result arrays gain leading ``[K, S]`` axes.
 
+Multi-device dispatch
+---------------------
+``simulate_grid(..., devices=..., mesh=...)`` shards the flattened
+``K*S`` lane axis across a 1-D device mesh via ``shard_map`` (the
+jax-0.4.37 compat spelling in :mod:`repro.compat`): every device runs
+``lanes/D`` independent simulations of the SAME compiled program, so the
+one-compile contract (``core_trace_count``) is unchanged.  Lane counts
+that don't divide the device count are padded by repeating the last lane
+and the padding is masked off the result.  ``devices="auto"`` uses all
+local devices; ``chunk_knobs`` bounds the knob points resident *per
+device*, so the memory bound composes with sharding.
+
 Entities
 --------
 flow slot   f in [0, F): persistent (ring, member) sender->successor relation
@@ -68,6 +80,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 from .params import (RuntimeKnobs, SimParams, SimStructure, grid_from_params,
                      merge_params, stack_knobs)
 from .stages import (BIG, I32MAX, WIRE_SEG, EngineState, WLArrays,  # noqa: F401
@@ -81,8 +95,11 @@ __all__ = [
     "SimParams", "SimStructure", "RuntimeKnobs", "SimResult", "Static",
     "simulate", "simulate_seeds", "simulate_grid", "simulate_core",
     "build_static", "link_domains", "grid_from_params", "stack_knobs",
-    "core_trace_count",
+    "core_trace_count", "resolve_grid_mesh", "GRID_AXIS",
 ]
+
+# name of the lane axis on the 1-D grid-dispatch mesh
+GRID_AXIS = "lanes"
 
 
 class SimResult(NamedTuple):
@@ -242,17 +259,14 @@ def _core_impl(st: Static, wl: WLArrays, struct: SimStructure,
     )
 
 
-def _grid_impl(st_stack: Static, wl: WLArrays, struct: SimStructure,
-               knobs_stack: RuntimeKnobs, keys: jax.Array) -> SimResult:
-    """vmap knob points x seeds through one trace of the engine body.
-
-    The (K knobs, S seeds) cross product is flattened to a SINGLE batch
-    axis of K*S lanes rather than nested vmaps: one-level batching keeps
-    XLA's scatter-add accumulation order per lane identical to the
-    unbatched program, so grid slices are bitwise-equal to per-point
-    ``simulate`` calls (nested vmaps reorder the adds by ~1 ulp).
-    Outputs are reshaped back to leading ``[K, S]``.
-    """
+def _flatten_lanes(st_stack: Static, knobs_stack: RuntimeKnobs,
+                   keys: jax.Array):
+    """Flatten the (K knobs, S seeds) cross product to a SINGLE batch axis
+    of ``K*S`` lanes (lane ``i = k*S + s``, row-major) rather than nested
+    vmaps: one-level batching keeps XLA's scatter-add accumulation order
+    per lane identical to the unbatched program, so grid slices are
+    bitwise-equal to per-point ``simulate`` calls (nested vmaps reorder
+    the adds by ~1 ulp)."""
     K = int(jax.tree.leaves(knobs_stack)[0].shape[0])
     S = int(keys.shape[0])
     sts = jax.tree.map(
@@ -262,14 +276,116 @@ def _grid_impl(st_stack: Static, wl: WLArrays, struct: SimStructure,
     kns = jax.tree.map(lambda x: jnp.repeat(x, S, axis=0), knobs_stack)
     kys = jnp.broadcast_to(keys[None], (K,) + keys.shape).reshape(
         (K * S,) + keys.shape[1:])
-    flat = jax.vmap(lambda st, kn, k: _core_impl(st, wl, struct, kn, k))(
+    return sts, kns, kys
+
+
+def _lanes_impl(sts: Static, wl: WLArrays, struct: SimStructure,
+                kns: RuntimeKnobs, kys: jax.Array) -> SimResult:
+    """vmap the engine body over a flat lane axis (the shared inner core
+    of the single-device and sharded grid programs)."""
+    return jax.vmap(lambda st, kn, k: _core_impl(st, wl, struct, kn, k))(
         sts, kns, kys)
+
+
+def _grid_impl(st_stack: Static, wl: WLArrays, struct: SimStructure,
+               knobs_stack: RuntimeKnobs, keys: jax.Array) -> SimResult:
+    """Single-device grid program: vmap knob points x seeds through one
+    trace of the engine body; outputs reshaped back to leading ``[K, S]``.
+    """
+    K = int(jax.tree.leaves(knobs_stack)[0].shape[0])
+    S = int(keys.shape[0])
+    sts, kns, kys = _flatten_lanes(st_stack, knobs_stack, keys)
+    flat = _lanes_impl(sts, wl, struct, kns, kys)
     return jax.tree.map(
         lambda x: x.reshape((K, S) + x.shape[1:]), flat)
 
 
 _grid_core = functools.partial(jax.jit, static_argnames=("struct",))(
     _grid_impl)
+
+
+def _sharded_grid_impl(st_stack: Static, wl: WLArrays,
+                       knobs_stack: RuntimeKnobs, keys: jax.Array, *,
+                       struct: SimStructure, mesh) -> SimResult:
+    """Sharded grid program: split the flattened ``K*S`` lane axis across
+    the 1-D device mesh via ``shard_map``.
+
+    Lanes are independent simulations, so the body needs no collectives —
+    each device vmaps the SAME engine trace over its ``lanes/D`` slice
+    (``core_trace_count`` still advances by exactly 1 per grid).  When
+    ``K*S`` does not divide the device count D, the lane axis is padded
+    by repeating the last lane ("edge" padding keeps the padded work
+    identical to real work, no NaN/denormal hazards) and the padding is
+    masked off the output before the ``[K, S]`` reshape.
+    """
+    K = int(jax.tree.leaves(knobs_stack)[0].shape[0])
+    S = int(keys.shape[0])
+    sts, kns, kys = _flatten_lanes(st_stack, knobs_stack, keys)
+    D = int(mesh.devices.size)
+    pad = (-(K * S)) % D
+
+    def edge_pad(x):
+        return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1), mode="edge")
+
+    if pad:
+        sts, kns, kys = jax.tree.map(edge_pad, (sts, kns, kys))
+    axis = mesh.axis_names[0]
+    lane = jax.sharding.PartitionSpec(axis)
+    rep = jax.sharding.PartitionSpec()
+    fn = compat.shard_map(
+        lambda a, b, c, d: _lanes_impl(a, b, struct, c, d),
+        mesh=mesh, in_specs=(lane, rep, lane, lane), out_specs=lane)
+    flat = fn(sts, wl, kns, kys)
+    return jax.tree.map(
+        lambda x: x[:K * S].reshape((K, S) + x.shape[1:]), flat)
+
+
+_sharded_core = functools.partial(jax.jit, static_argnames=("struct", "mesh"))(
+    _sharded_grid_impl)
+
+
+def resolve_grid_mesh(devices=None, mesh=None):
+    """Resolve ``simulate_grid``'s ``devices=`` / ``mesh=`` knobs into a
+    1-D lane mesh, or ``None`` for plain single-device dispatch.
+
+    * ``mesh=Mesh``        — use as-is (must be 1-D);
+    * ``devices=None``     — single device (the bitwise-stable default);
+    * ``devices="auto"``   — all local devices;
+    * ``devices=int``      — the first N local devices;
+    * ``devices=sequence`` — exactly those ``jax.Device`` objects.
+
+    A resolved mesh of one device is normalized to ``None``: single-lane
+    meshes add dispatch overhead without buying parallelism, and the
+    unsharded program is the bit-for-bit reference.
+    """
+    if mesh is not None:
+        if devices is not None:
+            raise ValueError("pass either devices= or mesh=, not both")
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"grid mesh must be 1-D, got axes {mesh.axis_names}")
+        return None if mesh.devices.size == 1 else mesh
+    if devices is None:
+        return None
+    if isinstance(devices, str):
+        if devices != "auto":
+            raise ValueError(f"devices= accepts 'auto', an int, or a "
+                             f"device sequence; got {devices!r}")
+        devs = jax.local_devices()
+    elif isinstance(devices, int):
+        devs = jax.local_devices()
+        if not 1 <= devices <= len(devs):
+            raise ValueError(
+                f"devices={devices} out of range; have {len(devs)} "
+                "local devices")
+        devs = devs[:devices]
+    else:
+        devs = list(devices)
+        if not devs:
+            raise ValueError("empty device sequence")
+    if len(devs) == 1:
+        return None
+    return jax.sharding.Mesh(np.array(devs), (GRID_AXIS,))
 
 
 def simulate_core(st: Static, wl: WLArrays, cfg, knobs_or_key, key=None
@@ -352,24 +468,26 @@ def _stacked_statics(topo, wl, mode, seeds, struct, bg_base=None, bg_amp=None,
 
 
 def simulate_seeds(topo: Topology, wl: Workload, cfg: SimParams,
-                   routing: str, seeds: Sequence[int], **bg) -> SimResult:
+                   routing: str, seeds: Sequence[int],
+                   devices=None, mesh=None, **bg) -> SimResult:
     """vmap over seeds: both the ECMP path draw and the DCQCN coin flips
     vary.  Result arrays gain a leading ``[S]`` axis.
 
     Implemented as a 1-point knob grid, so it shares the grid executor's
-    compilation cache."""
+    compilation cache; ``devices=`` / ``mesh=`` shard the seed lanes
+    across devices exactly like grid lanes."""
     resolve_share_policy(cfg)
     struct, knobs = cfg.split()
     res = simulate_grid(topo, wl, struct,
                         jax.tree.map(lambda x: x[None], knobs), seeds,
-                        routing=routing, **bg)
+                        routing=routing, devices=devices, mesh=mesh, **bg)
     return jax.tree.map(lambda x: x[0], res)
 
 
 def simulate_grid(topo: Topology, wl: Workload, struct: SimStructure,
                   knobs_grid, seeds: Sequence[int] = (0,),
                   routing: str = "ecmp", chunk_knobs: int | None = None,
-                  **bg) -> SimResult:
+                  devices=None, mesh=None, **bg) -> SimResult:
     """Batched grid executor: one compile, vmap over knob points x seeds.
 
     ``knobs_grid`` is a stacked :class:`RuntimeKnobs` pytree (leading axis
@@ -377,9 +495,17 @@ def simulate_grid(topo: Topology, wl: Workload, struct: SimStructure,
     latter must share ``struct``'s static structure).  Build one from flat
     configs with :func:`grid_from_params`.
 
+    ``devices=`` / ``mesh=`` (see :func:`resolve_grid_mesh`) shard the
+    flattened ``K*S`` lane axis across a 1-D device mesh: each device runs
+    an equal slice of the lanes through the same single compilation, with
+    the lane axis padded (and the padding masked off the result) when the
+    lane count doesn't divide the device count.
+
     The grid is chunked along the knob axis (``chunk_knobs`` points per
-    device batch, default: the whole grid) to bound memory; the last chunk
-    is padded by repeating the final point, so every chunk has the same
+    device, default: the whole grid) to bound memory; under a D-device
+    mesh one dispatch covers ``chunk_knobs * D`` knob points, so the
+    per-device memory bound is preserved.  The last partial chunk is
+    padded by repeating the final point, so every chunk has the same
     shape and the engine still traces exactly once.
 
     Returns a :class:`SimResult` whose arrays carry leading ``[K, S]``
@@ -403,21 +529,33 @@ def simulate_grid(topo: Topology, wl: Workload, struct: SimStructure,
         raise ValueError(
             f"unknown tick backend {struct.backend!r}; have {BACKENDS}")
     _check_pq_conflict(struct, knobs_grid.pq_on)
+    mesh = resolve_grid_mesh(devices, mesh)
     struct, mode = _resolve_routing(struct, routing)
     stacked, keys = _stacked_statics(topo, wl, mode, seeds, struct, **bg)
     wla = wl_arrays(wl, struct.dt)
 
     K = int(jax.tree.leaves(knobs_grid)[0].shape[0])
-    chunk = K if chunk_knobs is None else max(1, min(int(chunk_knobs), K))
+    D = 1 if mesh is None else int(mesh.devices.size)
+    # chunk_knobs bounds the knob points resident PER DEVICE, so a
+    # D-device dispatch covers chunk_knobs * D points at a time.
+    per_dev = K if chunk_knobs is None else max(1, min(int(chunk_knobs), K))
+    chunk = min(K, per_dev * D)
     pad = (-K) % chunk
     if pad:
+        # repeat the final point so the last partial chunk has the same
+        # shape as the others (one trace); its padded rows are sliced off
+        # the concatenated result below, never observed by callers.
         knobs_grid = jax.tree.map(
             lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]),
             knobs_grid)
     outs = []
     for i in range(0, K + pad, chunk):
         kn = jax.tree.map(lambda x: x[i:i + chunk], knobs_grid)
-        outs.append(_grid_core(stacked, wla, struct, kn, keys))
+        if mesh is None:
+            outs.append(_grid_core(stacked, wla, struct, kn, keys))
+        else:
+            outs.append(_sharded_core(stacked, wla, kn, keys,
+                                      struct=struct, mesh=mesh))
     if len(outs) == 1:
         return outs[0]
     return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0)[:K], *outs)

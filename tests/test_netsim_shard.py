@@ -1,0 +1,213 @@
+"""Tests for the multi-device grid dispatch (`simulate_grid(devices=...)`).
+
+Run with a forced CPU mesh to exercise the sharded path::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_netsim_shard.py
+
+On a plain 1-device host the mesh resolves to ``None`` and the
+device-dependent tests skip; the resolver/fallback tests still run, so
+the file is safe inside the ordinary tier-1 sweep.
+
+Equivalence contract (pinned by ``test_sharded_matches_single_device``):
+the integer tick outputs (finish_ticks, job_finish_ticks, ts_min_wire,
+ts_max_wire, ts_done_min) and ts_alpha_max are **bit-for-bit** identical
+sharded vs unsharded — per-lane scatter order inside the engine does not
+depend on how the lane axis is split.  The float32 time series
+(ts_throughput, ts_qmax) may drift a few ULPs (~2e-6 relative) because
+XLA reassociates the per-lane reductions differently at different batch
+sizes; those are compared with allclose.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.netsim import (GRID_AXIS, SimParams, WorkloadBuilder,
+                               core_trace_count, grid_from_params,
+                               make_leaf_spine, resolve_grid_mesh,
+                               simulate_grid, simulate_seeds)
+
+N_DEV = jax.device_count()
+multi = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8)")
+
+EXACT = ("finish_ticks", "job_finish_ticks", "ts_min_wire", "ts_max_wire",
+         "ts_done_min", "ts_alpha_max")
+CLOSE = ("ts_throughput", "ts_qmax")
+
+
+@pytest.fixture(scope="module")
+def small():
+    topo = make_leaf_spine(8, 2, 2)
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(8)), ring_size=4, chunk_bytes=1e6,
+                   passes=1)
+    return topo, b.build()
+
+
+def _cfgs(cfg, ks):
+    return [cfg._replace(sym_on=True, sym=cfg.sym._replace(k=k))
+            for k in ks]
+
+
+def _assert_equiv(ref, got, ctx=""):
+    for f in EXACT:
+        assert np.array_equal(np.asarray(getattr(ref, f)),
+                              np.asarray(getattr(got, f))), (f, ctx)
+    for f in CLOSE:
+        np.testing.assert_allclose(
+            np.asarray(getattr(got, f)), np.asarray(getattr(ref, f)),
+            rtol=1e-5, atol=1e-3, err_msg=f"{f} {ctx}")
+
+
+# --------------------------------------------------------------- resolver
+def test_resolve_none_and_single_device():
+    assert resolve_grid_mesh() is None
+    assert resolve_grid_mesh(devices=None) is None
+    # a 1-device request is a no-op mesh -> normalized to None (plain
+    # unsharded dispatch), so "auto" on a 1-device host just works
+    assert resolve_grid_mesh(devices=1) is None
+    if N_DEV == 1:
+        assert resolve_grid_mesh(devices="auto") is None
+
+
+def test_resolve_rejects_overask():
+    with pytest.raises(ValueError, match="devices"):
+        resolve_grid_mesh(devices=N_DEV + 1)
+
+
+@multi
+def test_resolve_auto_and_int():
+    mesh = resolve_grid_mesh(devices="auto")
+    assert mesh is not None and mesh.devices.size == N_DEV
+    assert mesh.axis_names == (GRID_AXIS,)
+    mesh2 = resolve_grid_mesh(devices=2)
+    assert mesh2.devices.size == 2
+    # an explicit mesh passes through untouched
+    assert resolve_grid_mesh(mesh=mesh2) is mesh2
+
+
+def test_resolve_rejects_2d_mesh():
+    from jax.sharding import Mesh
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    with pytest.raises(ValueError, match="1-D"):
+        resolve_grid_mesh(mesh=Mesh(devs, ("a", "b")))
+
+
+# ----------------------------------------------------------- equivalence
+@multi
+def test_sharded_matches_single_device(small):
+    """Sharded grid == unsharded grid: int fields bitwise, float32 series
+    within a few ULPs (see module docstring) — and ONE engine trace."""
+    topo, wl = small
+    cfg = SimParams(n_ticks=800, window=8, record_every=10)
+    struct, knobs = grid_from_params(
+        _cfgs(cfg, (1e-3, 3e-3, 1e-2, 3e-2)))          # K=4
+    seeds = [0, 1]                                      # K*S = 8 lanes
+    ref = simulate_grid(topo, wl, struct, knobs, seeds, routing="ecmp")
+    c0 = core_trace_count()
+    got = simulate_grid(topo, wl, struct, knobs, seeds, routing="ecmp",
+                        devices="auto")
+    assert core_trace_count() - c0 == 1, "sharded grid must be ONE compile"
+    _assert_equiv(ref, got)
+
+
+@multi
+def test_sharded_non_divisible_lanes_padded_and_masked(small):
+    """K*S = 12 lanes on an 8-device mesh: the executor edge-pads the lane
+    axis to 16, dispatches, and slices the padding off — every real lane
+    must match the unsharded run and the result keeps its [K, S] shape."""
+    topo, wl = small
+    cfg = SimParams(n_ticks=600, window=8, record_every=10)
+    struct, knobs = grid_from_params(
+        _cfgs(cfg, (1e-3, 2e-3, 3e-3, 5e-3, 1e-2, 3e-2)))   # K=6
+    seeds = [0, 1]                                           # 12 lanes
+    assert (len(seeds) * 6) % N_DEV != 0 or N_DEV == 2
+    ref = simulate_grid(topo, wl, struct, knobs, seeds, routing="ecmp")
+    got = simulate_grid(topo, wl, struct, knobs, seeds, routing="ecmp",
+                        devices="auto")
+    assert got.finish_ticks.shape[:2] == (6, 2)
+    _assert_equiv(ref, got, ctx="12 lanes / auto mesh")
+
+
+@multi
+def test_sharded_chunking_composes(small):
+    """chunk_knobs bounds knob points PER DEVICE: sharded + chunked
+    dispatch still reproduces the unsharded result."""
+    topo, wl = small
+    cfg = SimParams(n_ticks=600, window=8, record_every=10)
+    struct, knobs = grid_from_params(
+        _cfgs(cfg, (1e-3, 2e-3, 3e-3, 5e-3, 1e-2, 3e-2, 1e-1)))  # K=7
+    ref = simulate_grid(topo, wl, struct, knobs, [0], routing="ecmp")
+    got = simulate_grid(topo, wl, struct, knobs, [0], routing="ecmp",
+                        devices="auto", chunk_knobs=2)
+    _assert_equiv(ref, got, ctx="chunk_knobs=2 / auto mesh")
+
+
+@multi
+def test_sharded_devices_int_and_explicit_mesh(small):
+    topo, wl = small
+    cfg = SimParams(n_ticks=600, window=8, record_every=10)
+    struct, knobs = grid_from_params(_cfgs(cfg, (1e-3, 1e-2)))
+    ref = simulate_grid(topo, wl, struct, knobs, [0, 1], routing="ecmp")
+    got = simulate_grid(topo, wl, struct, knobs, [0, 1], routing="ecmp",
+                        devices=2)
+    _assert_equiv(ref, got, ctx="devices=2")
+    mesh = resolve_grid_mesh(devices=2)
+    got2 = simulate_grid(topo, wl, struct, knobs, [0, 1], routing="ecmp",
+                         mesh=mesh)
+    _assert_equiv(ref, got2, ctx="mesh=2-device")
+
+
+@multi
+def test_sharded_seeds_matches_single_device(small):
+    topo, wl = small
+    cfg = SimParams(n_ticks=600, window=8, record_every=10, sym_on=True)
+    seeds = [0, 1, 2]                   # 3 lanes: non-divisible on 2+ devs
+    ref = simulate_seeds(topo, wl, cfg, "ecmp", seeds)
+    got = simulate_seeds(topo, wl, cfg, "ecmp", seeds, devices="auto")
+    _assert_equiv(ref, got, ctx="simulate_seeds / auto mesh")
+
+
+def test_devices_none_is_default_path(small):
+    """devices=None must stay the exact single-device dispatch: same
+    object-level behaviour as not passing the knob at all."""
+    topo, wl = small
+    cfg = SimParams(n_ticks=400, window=8, record_every=10)
+    struct, knobs = grid_from_params(_cfgs(cfg, (1e-3, 1e-2)))
+    a = simulate_grid(topo, wl, struct, knobs, [0], routing="ecmp")
+    b = simulate_grid(topo, wl, struct, knobs, [0], routing="ecmp",
+                      devices=None)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------- bench plumbing
+def test_bench_grid_devices_env(monkeypatch):
+    from benchmarks import common
+    monkeypatch.delenv("BENCH_DEVICES", raising=False)
+    assert common.grid_devices() is None
+    monkeypatch.setenv("BENCH_DEVICES", "1")
+    assert common.grid_devices() is None
+    monkeypatch.setenv("BENCH_DEVICES", "auto")
+    assert common.grid_devices() == "auto"
+    monkeypatch.setenv("BENCH_DEVICES", "4")
+    assert common.grid_devices() == 4
+
+
+def test_cache_key_includes_device_fingerprint(monkeypatch):
+    """Single- and multi-device runs must not collide in the result
+    cache: the fingerprint (folded into every cached() key) must change
+    with the BENCH_DEVICES mesh."""
+    from benchmarks import common
+    monkeypatch.delenv("BENCH_DEVICES", raising=False)
+    fp1 = common.device_fingerprint()
+    assert fp1.endswith(":grid1")
+    if N_DEV >= 2:
+        monkeypatch.setenv("BENCH_DEVICES", "auto")
+        fp8 = common.device_fingerprint()
+        assert fp8 != fp1 and fp8.endswith(f":grid{N_DEV}")
