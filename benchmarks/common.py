@@ -440,6 +440,22 @@ def default_params(n_ticks: int, sym: bool = False, **kw) -> SimParams:
     return SimParams(n_ticks=n_ticks, window=64, sym_on=sym, **kw)
 
 
+def kernel_tuning() -> dict:
+    """Fused-kernel tuning knobs for the benchmark layer, overridable via
+    env (``BENCH_SEGSUM``, ``BENCH_BLK``, ``BENCH_TICK_WINDOW``) so perf
+    sweeps over the kernel configuration need no code edits.  Returns
+    ``SimParams`` override kwargs; the defaults are the committed
+    BENCH_netsim.json trajectory configuration (scatter segsum, untiled,
+    tick_window=5 — windows amortize state HBM round-trips, see
+    ``roofline.netsim_tick_tiled``)."""
+    segsum = os.environ.get("BENCH_SEGSUM", "scatter")
+    blk = os.environ.get("BENCH_BLK", "")
+    tw = os.environ.get("BENCH_TICK_WINDOW", "5")
+    return {"segsum": segsum,
+            "blk": int(blk) if blk else None,
+            "tick_window": int(tw) if tw else 1}
+
+
 def params_for_seconds(horizon_s: float, sym: bool = False,
                        coarse: bool = False, **kw) -> SimParams:
     """coarse=True runs at 20 us ticks (halves cost for multi-second JCT

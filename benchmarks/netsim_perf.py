@@ -44,17 +44,33 @@ from repro.core.netsim import (core_trace_count, grid_from_params,
 from repro.core.netsim.simulator import (_core_impl, _resolve_routing,
                                          build_static, wl_arrays)
 
-from .common import QUICK, build_scenario, cached, default_params, knob_grid
+from .common import (QUICK, build_scenario, cached, default_params,
+                     kernel_tuning, knob_grid)
 
 BENCH_FILE = Path(__file__).resolve().parents[1] / "BENCH_netsim.json"
-BENCH_SCHEMA = 2
+# Schema 3: adds the append-only "trajectory" list — one entry per PR
+# (git sha + kernel configuration + ticks/sec), the longitudinal perf
+# record the per-mode snapshot entries cannot provide.
+BENCH_SCHEMA = 3
 
 # single source of truth for the benchmark parameters and the cache key
 CONFIG = dict(n_ticks=2_000 if QUICK else 30_000,
               taus=(0.1, 0.2, 0.25, 0.5), ks=(1e-3, 3e-3, 1e-2, 3e-2),
               n_seeds=4 if QUICK else 8,
               grid_seeds=1 if QUICK else 2,
-              backends=("xla", "pallas"))
+              backends=("xla", "pallas"),
+              tuning=kernel_tuning())
+
+
+def _git_sha() -> str:
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=BENCH_FILE.parent, capture_output=True, text=True,
+            timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
 
 def _per_point_reference(topo, wl, cfgs, seed=0):
@@ -93,9 +109,15 @@ def backend_compare(topo, wl, cfg):
     ``netsim_tick`` section for the analytic bytes-moved model)."""
     from repro.kernels.netsim_tick import use_interpret
     n_ticks = cfg.n_ticks
+    tuning = CONFIG["tuning"]
+    variants = [("xla", cfg._replace(backend="xla")),
+                ("pallas", cfg._replace(backend="pallas")),
+                # the trajectory configuration: the fused kernel with the
+                # multi-tick window (and any BENCH_SEGSUM/BENCH_BLK
+                # overrides) — what BENCH_netsim.json tracks across PRs
+                ("pallas_tuned", cfg._replace(backend="pallas", **tuning))]
     out = {}
-    for be in ("xla", "pallas"):
-        c = cfg._replace(backend=be)
+    for be, c in variants:
         t0 = time.time()
         jax.block_until_ready(simulate(topo, wl, c, "ecmp", 0))
         cold = time.time() - t0
@@ -110,6 +132,8 @@ def backend_compare(topo, wl, cfg):
     out["pallas_interpret"] = use_interpret()
     out["pallas_vs_xla"] = round(
         out["pallas"]["ticks_per_s"] / out["xla"]["ticks_per_s"], 2)
+    out["pallas_tuned_vs_xla"] = round(
+        out["pallas_tuned"]["ticks_per_s"] / out["xla"]["ticks_per_s"], 2)
     return out
 
 
@@ -224,11 +248,16 @@ def _mode() -> str:
 
 def write_bench(result) -> dict:
     """Merge this run into the committed perf artifact, keyed by mode
-    ("quick" = the CI configuration, "full" = the local 30k-tick one)."""
+    ("quick" = the CI configuration, "full" = the local 30k-tick one),
+    and append this commit's entry to the per-PR ``trajectory`` list."""
     data = {}
     if BENCH_FILE.exists():
         data = json.loads(BENCH_FILE.read_text())
-        if data.get("schema") != BENCH_SCHEMA:
+        if data.get("schema") == 2:
+            # schema 2 -> 3: mode snapshot entries carry over unchanged;
+            # the trajectory starts empty and grows from this run on.
+            data["schema"] = BENCH_SCHEMA
+        elif data.get("schema") != BENCH_SCHEMA:
             data = {}
     data["schema"] = BENCH_SCHEMA
     mesh = resolve_grid_mesh(devices="auto")
@@ -247,6 +276,26 @@ def write_bench(result) -> dict:
                  "mesh_shape": [n_dev]},
         "result": result,
     }
+    # ---- append-only per-PR trajectory (re-running on the same commit
+    # and mode updates that entry in place instead of duplicating it)
+    tuning = CONFIG["tuning"]
+    entry = {
+        "sha": _git_sha(),
+        "mode": _mode(),
+        "backend": "pallas",
+        "segsum": tuning["segsum"],
+        "blk": tuning["blk"],
+        "tick_window": tuning["tick_window"],
+        "lanes": result.get("grid_lanes"),
+        "ticks_per_s": result["backends"]["pallas_tuned"]["ticks_per_s"],
+        "ticks_per_s_xla": result["backends"]["xla"]["ticks_per_s"],
+        "device_count": jax.device_count(),
+    }
+    traj = [e for e in data.get("trajectory", [])
+            if not (e.get("sha") == entry["sha"]
+                    and e.get("mode") == entry["mode"])]
+    traj.append(entry)
+    data["trajectory"] = traj
     BENCH_FILE.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
     return data
 
@@ -257,6 +306,7 @@ def write_bench(result) -> dict:
 _GATED = (("ticks_per_s_single",), ("ticks_per_s_vmap",),
           ("backends", "xla", "ticks_per_s"),
           ("backends", "pallas", "ticks_per_s"),
+          ("backends", "pallas_tuned", "ticks_per_s"),
           ("grid_speedup_multi_device",))
 # Warn below 0.5x committed: CI runs on shared 2-core VMs whose absolute
 # throughput swings widely run-to-run, so the gate is loose and warn-only —
@@ -296,6 +346,27 @@ def check() -> int:
                   f"{have} < {CHECK_RATIO} * committed {want}")
             warned = True
         print(line)
+    # ---- trajectory gate: fresh fused-kernel throughput vs the newest
+    # committed trajectory entry for this mode (same warn-only contract)
+    traj = [e for e in data.get("trajectory", [])
+            if e.get("mode") == _mode()
+            and isinstance(e.get("ticks_per_s"), (int, float))]
+    if traj:
+        last = traj[-1]
+        want = last["ticks_per_s"]
+        have = fresh["backends"]["pallas_tuned"]["ticks_per_s"]
+        print(f"  trajectory[{last.get('sha')}].ticks_per_s: {have} vs "
+              f"committed {want} ({have / want:.2f}x; segsum="
+              f"{last.get('segsum')} blk={last.get('blk')} "
+              f"tick_window={last.get('tick_window')})")
+        if want > 0 and have < CHECK_RATIO * want:
+            print(f"::warning title=netsim_perf trajectory regression::"
+                  f"pallas_tuned {have} < {CHECK_RATIO} * committed {want} "
+                  f"(entry {last.get('sha')})")
+            warned = True
+    else:
+        print("  trajectory: no committed entry for mode "
+              f"'{_mode()}' yet")
     host = entry.get("host", {})
     print(f"  committed on {host.get('cpu_count')}-core "
           f"{host.get('machine')} / jax {host.get('jax')}; warn-only "

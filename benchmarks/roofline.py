@@ -180,8 +180,85 @@ def netsim_tick_traffic():
     }
 
 
+# Per-instance arrays streamed block-by-block through VMEM by the tiled
+# kernel (BlockSpec over the flat [FW] axis); everything else stays
+# resident across grid steps (constant index maps -> fetched once).
+_BLOCK_STREAMED_IN = ("state_inst", "inst_consts")
+_BLOCK_STREAMED_OUT = ("out_routes", "out_inst")
+_TILED_SWEEPS = 4   # kernel.TILED_SWEEPS: jobmin/offered/eff/finalize
+
+
+def netsim_tick_tiled(blk: int = 256, tick_window: int = 5):
+    """Analytic HBM/VMEM model of the PR-8 kernel shapes, next to the
+    PR-6 monolithic number (``netsim_tick_traffic``):
+
+    * **tiled onehot grid kernel** — per-instance operands stream through
+      VMEM one ``blk``-row block at a time (re-fetched once per sweep,
+      so x TILED_SWEEPS), while link/Symphony/static arrays stay VMEM-
+      resident across grid steps; reports the per-block VMEM working set
+      that replaces the whole-[FW] residency of the monolithic kernel.
+    * **multi-tick window kernel** — the full engine state round-trips
+      HBM once per ``tick_window`` ticks instead of once per tick, so
+      state bytes/tick amortize to 1/tick_window.
+    """
+    from repro.core.netsim import build_static
+    from repro.core.netsim.simulator import wl_arrays
+    from repro.core.netsim.stages import make_ctx
+
+    from .common import build_scenario
+
+    topo, wl, cfg, _ = build_scenario("table1_ring", passes=2)
+    st = build_static(topo, wl, "ecmp", 0, dt=cfg.dt, deploy=cfg.deploy)
+    ctx = make_ctx(st, wl_arrays(wl, cfg.dt), cfg.window)
+    P = int(st.path_table.shape[1])
+    SEG = int(ctx.wl.chunk_sched.shape[1])
+    io, inter = _tick_arrays(ctx.F, ctx.W, ctx.H, ctx.L, ctx.D, ctx.J,
+                             P, SEG)
+    FW = ctx.F * ctx.W
+    nb = -(-FW // blk)
+    io_b = sum(n * w for n, w in io.values())
+    inter_b = 2 * sum(n * w for n, w in inter.values())
+    staged = io_b + inter_b
+
+    stream_in = sum(n * w for k, (n, w) in io.items()
+                    if k in _BLOCK_STREAMED_IN)
+    stream_out = sum(n * w for k, (n, w) in io.items()
+                     if k in _BLOCK_STREAMED_OUT)
+    resident = io_b - stream_in - stream_out
+    # streamed inputs re-fetched every sweep; resident arrays + outputs
+    # cross HBM once per tick
+    tiled = _TILED_SWEEPS * stream_in + resident + stream_out
+    vmem_block = (stream_in + stream_out) // FW * blk + resident
+
+    # window kernel: whole state + static in/out once per window; the
+    # per-tick sample write is a few [J]+scalar rows (negligible)
+    window = io_b / tick_window
+
+    return {
+        "scenario": "table1_ring",
+        "blk": blk, "n_blocks": nb, "tick_window": tick_window,
+        "bytes_per_tick_staged": staged,
+        "bytes_per_tick_fused_monolithic": io_b,          # the PR 6 number
+        "bytes_per_tick_tiled": tiled,
+        "bytes_per_tick_windowed": round(window),
+        "vmem_working_set_monolithic_kib": round(io_b / 1024, 1),
+        "vmem_working_set_tiled_kib": round(vmem_block / 1024, 1),
+        "fusion_ratio_monolithic": round(staged / io_b, 2),
+        "fusion_ratio_tiled": round(staged / tiled, 2),
+        "fusion_ratio_windowed": round(staged / window, 2),
+        "ticks_per_s_hbm_ceiling_tiled": round(HBM / tiled),
+        "ticks_per_s_hbm_ceiling_windowed": round(HBM / window),
+        "note": "tiled: streamed blocks re-fetched once per sweep, "
+                "resident arrays fetched once (Mosaic skips re-fetch on "
+                "unchanged block index); windowed: state HBM round-trips "
+                "amortized 1/tick_window (tiling and windows are "
+                "mutually exclusive — see ops.plan_tiling)",
+    }
+
+
 def bench():
-    out = {"netsim_tick": netsim_tick_traffic()}
+    out = {"netsim_tick": netsim_tick_traffic(),
+           "netsim_tick_tiled": netsim_tick_tiled()}
     if RESULTS.exists():
         out["rows"] = rows("single")
     else:

@@ -65,13 +65,22 @@ class SimParams(NamedTuple):
                                    # step is a distinct flow to ECMP)
     backend: str = "xla"           # tick hot-path backend: "xla" staged ops |
                                    # "pallas" fused kernel (kernels/netsim_tick)
+    segsum: str = "scatter"        # kernel segment reductions: "scatter"
+                                   # (.at[].add, bitwise reference) | "onehot"
+                                   # (dense contractions, the Mosaic shape)
+    blk: int | None = None         # instance-axis tile for the onehot kernel
+                                   # (None = whole [FW] in one block)
+    tick_window: int = 1           # ticks fused per kernel invocation
+                                   # (pallas backend; amortizes state HBM
+                                   # round trips 1/tick_window)
 
     def structure(self) -> "SimStructure":
         return SimStructure(
             dt=self.dt, n_ticks=self.n_ticks, window=self.window,
             mtu=self.mtu, record_every=self.record_every,
             share_policy=self.share_policy, deploy=self.deploy,
-            per_step_ecmp=self.per_step_ecmp, backend=self.backend)
+            per_step_ecmp=self.per_step_ecmp, backend=self.backend,
+            segsum=self.segsum, blk=self.blk, tick_window=self.tick_window)
 
     def knobs(self) -> "RuntimeKnobs":
         f32 = lambda v: jnp.asarray(v, jnp.float32)
@@ -104,6 +113,9 @@ class SimStructure(NamedTuple):
     deploy: str = "tor"
     per_step_ecmp: bool = True
     backend: str = "xla"
+    segsum: str = "scatter"
+    blk: int | None = None
+    tick_window: int = 1
 
 
 class RuntimeKnobs(NamedTuple):
@@ -146,6 +158,9 @@ class EngineParams(NamedTuple):
     deploy: str
     per_step_ecmp: bool
     backend: str
+    segsum: str
+    blk: int | None
+    tick_window: int
     red_kmin: jax.Array
     red_kmax: jax.Array
     red_pmax: jax.Array
@@ -168,6 +183,7 @@ def merge_params(struct: SimStructure, knobs: RuntimeKnobs) -> EngineParams:
         mtu=struct.mtu, record_every=struct.record_every,
         share_policy=struct.share_policy, deploy=struct.deploy,
         per_step_ecmp=struct.per_step_ecmp, backend=struct.backend,
+        segsum=struct.segsum, blk=struct.blk, tick_window=struct.tick_window,
         **knobs._asdict())
 
 

@@ -86,7 +86,7 @@ from .params import (RuntimeKnobs, SimParams, SimStructure, grid_from_params,
                      merge_params, stack_knobs)
 from .stages import (BIG, I32MAX, WIRE_SEG, EngineState, WLArrays,  # noqa: F401
                      BACKENDS, SHARE_POLICIES, engine_tick, init_state,
-                     make_ctx, resolve_share_policy)
+                     make_ctx, resolve_backend, resolve_share_policy)
 from .topology import LEVEL_SPINE, LEVEL_TOR, Topology
 from .workload import (Workload, balanced_choice, ecmp_choice, path_table_for,
                        routes_for)
@@ -244,10 +244,43 @@ def _core_impl(st: Static, wl: WLArrays, struct: SimStructure,
     R = cfg.record_every
     n_rec = cfg.n_ticks // R
 
-    def rec_body(state, r):
-        ticks = r * R + jnp.arange(R)
-        state, samples = jax.lax.scan(tick_fn, state, ticks)
-        return state, jax.tree.map(lambda x: x[-1], samples)
+    w = int(getattr(cfg, "tick_window", 1) or 1)
+    if w < 1:
+        raise ValueError(f"tick_window must be >= 1, got {w}")
+    if w > 1 and resolve_backend(cfg) != "pallas":
+        raise ValueError(
+            f"tick_window={w} > 1 requires the fused pallas backend "
+            f"(got backend={cfg.backend!r}, share_policy="
+            f"{cfg.share_policy!r}; wfq/drr fall back to the staged XLA "
+            "path, which has no multi-tick window kernel)")
+    # A window never spans a record boundary: the sample contract is "the
+    # last tick of each record period", so windows chunk each period into
+    # R // w full windows plus one R % w remainder window.
+    w = min(w, R)
+
+    if w > 1:
+        from ...kernels.netsim_tick.ops import engine_window_fused
+        n_full, rem = divmod(R, w)
+
+        def rec_body(state, r):
+            base = r * R
+            sample = None
+            if n_full:
+                def win(state, j):
+                    return engine_window_fused(ctx, cfg, state,
+                                               base + j * w, w)
+                state, samples = jax.lax.scan(win, state,
+                                              jnp.arange(n_full))
+                sample = jax.tree.map(lambda x: x[-1], samples)
+            if rem:
+                state, sample = engine_window_fused(ctx, cfg, state,
+                                                    base + n_full * w, rem)
+            return state, sample
+    else:
+        def rec_body(state, r):
+            ticks = r * R + jnp.arange(R)
+            state, samples = jax.lax.scan(tick_fn, state, ticks)
+            return state, jax.tree.map(lambda x: x[-1], samples)
 
     state, samples = jax.lax.scan(rec_body, state0, jnp.arange(n_rec))
     min_w, max_w, done_min, tput, qmax, alph = samples

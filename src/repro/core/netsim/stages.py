@@ -34,6 +34,7 @@ without retracing per parameter point.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple
 
@@ -47,7 +48,11 @@ from ..symphony import marking_probability
 # Monotone across segments; comparable across flows inside a segment.
 WIRE_SEG = 4096
 I32MAX = np.iinfo(np.int32).max
-BIG = jnp.int32(2**30)
+# Python int, not jnp.int32: promotes weakly to int32 in every use
+# (identical values), and keeps stage code callable inside Pallas kernel
+# bodies, which cannot capture device-array constants (the multi-tick
+# window kernel replays the stages per tick).
+BIG = 2**30
 
 
 class WLArrays(NamedTuple):
@@ -637,6 +642,7 @@ def stage_share(ctx: EngineCtx, cfg, inst: InstView, tick) -> ShareResult:
 
 
 BACKENDS = ("xla", "pallas")
+_FALLBACK_WARNED: set = set()
 
 
 def resolve_backend(cfg) -> str:
@@ -645,13 +651,21 @@ def resolve_backend(cfg) -> str:
     ``backend="pallas"`` fuses route-gather / bandwidth-share / queue-RED /
     Symphony-scatter into the ``kernels/netsim_tick`` Pallas kernel.  The
     kernel implements the ``proportional`` and ``pq`` share paths (plus the
-    traced ``pq_on`` gate); ``wfq``/``drr`` stay on the staged XLA path
-    behind this same dispatch.
+    traced ``pq_on`` gate); ``wfq``/``drr`` fall back to the staged XLA
+    path behind this same dispatch, logged once per policy via
+    ``warnings.warn``.
     """
     be = getattr(cfg, "backend", "xla")
     if be not in BACKENDS:
         raise ValueError(f"unknown tick backend {be!r}; have {BACKENDS}")
     if be == "pallas" and cfg.share_policy not in ("proportional", "pq"):
+        if cfg.share_policy not in _FALLBACK_WARNED:
+            _FALLBACK_WARNED.add(cfg.share_policy)
+            warnings.warn(
+                f"backend='pallas' with share_policy={cfg.share_policy!r} "
+                "falls back to the staged XLA tick: the fused kernel only "
+                "implements the proportional/pq share paths",
+                stacklevel=2)
         return "xla"
     return be
 

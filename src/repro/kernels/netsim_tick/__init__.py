@@ -3,12 +3,14 @@
 Selected via ``SimParams(backend="pallas")``; the staged XLA engine in
 `core/netsim/stages.py` stays the golden reference (`ref.py`).
 """
-from .kernel import SEGSUM_MODES, TickOut, netsim_tick
-from .ops import engine_tick_fused, fused_tick, use_interpret
-from .ref import fused_outputs_ref, tick_ref
+from .kernel import SEGSUM_MODES, TickOut, hot_tick, netsim_tick
+from .ops import (engine_tick_fused, engine_window_fused, fused_tick,
+                  plan_tiling, use_interpret)
+from .ref import fused_outputs_ref, tick_ref, window_ref
 
 __all__ = [
-    "SEGSUM_MODES", "TickOut", "netsim_tick",
-    "engine_tick_fused", "fused_tick", "use_interpret",
-    "fused_outputs_ref", "tick_ref",
+    "SEGSUM_MODES", "TickOut", "hot_tick", "netsim_tick",
+    "engine_tick_fused", "engine_window_fused", "fused_tick",
+    "plan_tiling", "use_interpret",
+    "fused_outputs_ref", "tick_ref", "window_ref",
 ]

@@ -27,8 +27,38 @@ Segment reductions come in two flavors (``segsum=``):
   this is the shape a compiled TPU lowering takes; adds reassociate, so
   it is allclose-not-bitwise vs the reference.
 
+Tiling (``blk=``): the onehot variant additionally runs as a proper grid
+kernel over the flat ``[FW]`` instance axis — ``grid = (4 sweeps,
+ceil(FW/blk) blocks)`` with ``BlockSpec``-tiled per-instance operands, so
+the dense one-hot contraction is ``[L+1, blk*H]`` per block instead of
+``[L+1, FW*H]`` and the working set fits VMEM at any instance count.
+The tick's chained global reductions (job min-wire -> link scales ->
+eff -> Symphony step-min -> psn-window) force multiple passes over the
+instance blocks; each pass is one sweep of the grid, with the ``[J]`` /
+``[L+1]`` / ``[DJ]`` reductions accumulated as per-block partials in
+persistent scratch:
+
+  sweep 0   job min-wire partials + proportional offered-load partials
+  sweep 1   hi/lo-class offered-load partials (needs complete min-wire)
+  sweep 2   link scales finalized (block 0), then per-block eff +
+            Symphony cnt/cntop/step-min partials
+  sweep 3   step-min finalized (block 0), per-block psn-window partials,
+            per-instance outputs; final block flushes link/Symphony outs
+
+min/max reductions accumulate exactly (associative), so integer outputs
+match the untiled kernel bit-for-bit; the float adds reassociate across
+blocks (allclose), same contract as ``onehot`` itself.  Non-dividing
+``FW`` is edge-padded to a whole number of blocks and the padded rows
+masked inactive.  Under ``jax.vmap`` (the grid executor's lane batching)
+the whole thing stays ONE ``pallas_call`` with a leading lane axis
+prepended to the grid: ``[lanes, 4, FW_blocks]``.
+
 Compiled (non-interpret) execution is untested on this repo's CPU-only
-CI — `ops.use_interpret` defaults to interpret mode on CPU hosts.
+CI — `ops.use_interpret` defaults to interpret mode on CPU hosts.  The
+remaining obstacle to a real Mosaic compile is the route/table gathers
+(Mosaic has no vector-gather lowering yet); the scatters — which have no
+lowering path at all — are fully eliminated in the tiled onehot variant
+(CI greps the StableHLO to keep it that way).
 """
 from __future__ import annotations
 
@@ -38,6 +68,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from ...core.netsim.stages import WIRE_SEG, per_hop
 
@@ -46,6 +77,9 @@ from ...core.netsim.stages import WIRE_SEG, per_hop
 _BIG = 2**30
 
 SEGSUM_MODES = ("scatter", "onehot")
+
+# sweeps of the tiled grid (see module docstring)
+TILED_SWEEPS = 4
 
 
 class TickOut(NamedTuple):
@@ -99,35 +133,29 @@ def _segmin(base, idx, vals, mode):
     return jnp.minimum(base, jnp.where(oh, vals[None, :], neutral).min(axis=1))
 
 
-# ------------------------------------------------------- kernel body
-def _tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
-                 smin_ref, spsn_ref, salpha_ref, scnt_ref, scntop_ref,
-                 routes_ref, table_ref, npaths_ref, cap_ref, dom_ref,
-                 bgb_ref, bga_ref,
-                 job_ref, flow_ref, sps_ref, phase_ref, nph_ref, off_ref,
-                 chunk_ref, iscal_ref, fscal_ref,
-                 iroute_o, eff_o, offered_o, q_o, pred_o,
-                 smin_o, spsn_o, salpha_o, scnt_o, scntop_o,
-                 *, H, SEG, dt, mtu, per_step_ecmp, policy, segsum):
-    istep = step_ref[...]
-    isent = sent_ref[...]
-    irate = rate_ref[...]
-    inst_job = job_ref[...]
-    inst_flow = flow_ref[...]
-    sps = sps_ref[...]
-    phase = phase_ref[...]
-    nph = nph_ref[...]
-    off = off_ref[...]
-    cap = cap_ref[...]
-    link_dom = dom_ref[...]
-    chunk_sched = chunk_ref[...]
-    tick, seed = iscal_ref[0], iscal_ref[1]
-    bg_period, sym_win, pq_on = iscal_ref[2], iscal_ref[3], iscal_ref[4]
-    bg_duty = fscal_ref[0]
-    red_kmin, red_kmax, red_pmax = fscal_ref[1], fscal_ref[2], fscal_ref[3]
-    tau, n_sample, alpha_max = fscal_ref[4], fscal_ref[5], fscal_ref[6]
+def _zero_null_link(q, L, mode):
+    """``q.at[L].set(0.0)``: the trailing null link never queues.  The
+    dense mode uses an iota select — bitwise-identical values (pure
+    select, no arithmetic), but no scatter op for Mosaic to choke on."""
+    if mode == "scatter":
+        return q.at[L].set(0.0)
+    return jnp.where(
+        jax.lax.broadcasted_iota(jnp.int32, q.shape, 0) == L, 0.0, q)
+
+
+# ------------------------------------------------ value-level hot stages
+def hot_tick(istep, isent, irate, done_upto, q_prev,
+             s_stepmin, s_psnwin, s_alpha, s_cnt, s_cntop,
+             routes, path_table, n_paths, cap, link_dom, bg_base, bg_amp,
+             inst_job, inst_flow, sps, phase, nph, off, chunk_sched,
+             tick, seed, bg_period, sym_win, pq_on,
+             bg_duty, red_kmin, red_kmax, red_pmax, tau, n_sample, alpha_max,
+             *, H, SEG, dt, mtu, per_step_ecmp, policy, segsum) -> TickOut:
+    """The fused hot stages on plain values (the monolithic kernel body,
+    also replayed per tick by the multi-tick window kernel).  Op order
+    replays the stage functions exactly — bitwise in scatter mode."""
     J = chunk_sched.shape[0]
-    DJ = smin_ref.shape[0]
+    DJ = s_stepmin.shape[0]
     L = cap.shape[0] - 1
 
     # ---- instance view (stages.instance_view, on-chip)
@@ -135,7 +163,7 @@ def _tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
     ichunk = chunk_sched[inst_job, jnp.clip(iseg, 0, SEG - 1)]
     iwire = iseg * WIRE_SEG + istep % sps + off
     occupied = istep >= 0
-    retired = occupied & (istep < done_ref[...][inst_flow])
+    retired = occupied & (istep < done_upto[inst_flow])
     complete = occupied & (isent >= ichunk)
     active = occupied & ~complete & ~retired
     ipsn = isent / mtu
@@ -147,11 +175,11 @@ def _tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
              + (seed.astype(jnp.uint32) + 1) * jnp.uint32(2246822519))
         h = (h ^ (h >> 13)) * jnp.uint32(2654435761)
         h = h ^ (h >> 16)
-        n_p = npaths_ref[...][inst_flow].astype(jnp.uint32)
+        n_p = n_paths[inst_flow].astype(jnp.uint32)
         choice = (h % n_p).astype(jnp.int32)
-        iroute = table_ref[...][inst_flow, choice]
+        iroute = path_table[inst_flow, choice]
     else:
-        iroute = routes_ref[...][inst_flow]
+        iroute = routes[inst_flow]
     flat_links = iroute.reshape(-1)
 
     def lsum(vals):
@@ -161,7 +189,7 @@ def _tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
     # ---- bandwidth sharing (stages.share_proportional / share_pq)
     bg_on = (tick % bg_period).astype(jnp.float32) < \
         bg_duty * bg_period.astype(jnp.float32)
-    bg = bgb_ref[...] + jnp.where(bg_on, bga_ref[...], 0.0)
+    bg = bg_base + jnp.where(bg_on, bg_amp, 0.0)
     w_rate = jnp.where(active, irate, 0.0)
 
     off_p = lsum(w_rate) + bg
@@ -191,8 +219,8 @@ def _tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
         offered = jnp.where(gate, off_q, off_p)
 
     # ---- queues + RED (stages.stage_queues)
-    q = jnp.maximum(q_ref[...] + (offered - cap) * dt, 0.0)
-    q = q.at[L].set(0.0)
+    q = jnp.maximum(q_prev + (offered - cap) * dt, 0.0)
+    q = _zero_null_link(q, L, segsum)
     p_red = jnp.clip((q - red_kmin) / (red_kmax - red_kmin),
                      0.0, 1.0) * red_pmax
 
@@ -200,7 +228,7 @@ def _tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
     idom = link_dom[iroute]
     dj = idom * J + inst_job[:, None]
     djf = dj.reshape(-1)
-    sm = smin_ref[...][dj]
+    sm = s_stepmin[dj]
     pkts = eff * dt / mtu
     newly_done = active & (isent + eff * dt >= ichunk)
 
@@ -212,16 +240,16 @@ def _tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
     pkts4 = per_hop(pkts, H)
     sm4 = sm.reshape(-1)
 
-    cnt = _segadd(scnt_ref[...], djf, jnp.where(act4, pkts4, 0.0), segsum)
-    cntop = _segadd(scntop_ref[...], djf,
+    cnt = _segadd(s_cnt, djf, jnp.where(act4, pkts4, 0.0), segsum)
+    cntop = _segadd(s_cntop, djf,
                     jnp.where(act4 & (wire4 > sm4), pkts4, 0.0), segsum)
     cand = _segmax(jnp.zeros(DJ, jnp.int32), djf,
                    jnp.where(done4, wire4 + 1, 0), segsum)
-    cand = jnp.maximum(smin_ref[...], cand)
+    cand = jnp.maximum(s_stepmin, cand)
     min_act = _segmin(jnp.full(DJ, _BIG, jnp.int32), djf,
                       jnp.where(act4 & ~done4, wire4, _BIG), segsum)
     stepmin = jnp.where(min_act < _BIG, jnp.minimum(cand, min_act), cand)
-    psnwin = _segmax(spsn_ref[...], djf,
+    psnwin = _segmax(s_psnwin, djf,
                      jnp.where(send4 & ~done4 & (wire4 == stepmin[djf]),
                                psn4, 0.0), segsum)
 
@@ -229,19 +257,265 @@ def _tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
     have = cnt > n_sample
     exceed = cntop >= tau * cnt
     alpha_new = jnp.clip(
-        salpha_ref[...] + jnp.where(exceed, 1.0, -1.0) * have,
+        s_alpha + jnp.where(exceed, 1.0, -1.0) * have,
         1.0, alpha_max)
 
-    iroute_o[...] = iroute
-    eff_o[...] = eff
-    offered_o[...] = offered
-    q_o[...] = q
-    pred_o[...] = p_red
-    smin_o[...] = stepmin
-    spsn_o[...] = jnp.where(sym_epoch, 0.0, psnwin)
-    salpha_o[...] = jnp.where(sym_epoch, alpha_new, salpha_ref[...])
-    scnt_o[...] = jnp.where(sym_epoch, 0.0, cnt)
-    scntop_o[...] = jnp.where(sym_epoch, 0.0, cntop)
+    return TickOut(
+        iroute=iroute, eff=eff, offered=offered, q=q, p_red=p_red,
+        s_stepmin=stepmin,
+        s_psnwin=jnp.where(sym_epoch, 0.0, psnwin),
+        s_alpha=jnp.where(sym_epoch, alpha_new, s_alpha),
+        s_cnt=jnp.where(sym_epoch, 0.0, cnt),
+        s_cntop=jnp.where(sym_epoch, 0.0, cntop))
+
+
+# ------------------------------------------------- monolithic kernel body
+def _tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
+                 smin_ref, spsn_ref, salpha_ref, scnt_ref, scntop_ref,
+                 routes_ref, table_ref, npaths_ref, cap_ref, dom_ref,
+                 bgb_ref, bga_ref,
+                 job_ref, flow_ref, sps_ref, phase_ref, nph_ref, off_ref,
+                 chunk_ref, iscal_ref, fscal_ref,
+                 iroute_o, eff_o, offered_o, q_o, pred_o,
+                 smin_o, spsn_o, salpha_o, scnt_o, scntop_o,
+                 *, H, SEG, dt, mtu, per_step_ecmp, policy, segsum):
+    out = hot_tick(
+        step_ref[...], sent_ref[...], rate_ref[...], done_ref[...],
+        q_ref[...], smin_ref[...], spsn_ref[...], salpha_ref[...],
+        scnt_ref[...], scntop_ref[...],
+        routes_ref[...], table_ref[...], npaths_ref[...], cap_ref[...],
+        dom_ref[...], bgb_ref[...], bga_ref[...],
+        job_ref[...], flow_ref[...], sps_ref[...], phase_ref[...],
+        nph_ref[...], off_ref[...], chunk_ref[...],
+        iscal_ref[0], iscal_ref[1], iscal_ref[2], iscal_ref[3], iscal_ref[4],
+        fscal_ref[0], fscal_ref[1], fscal_ref[2], fscal_ref[3], fscal_ref[4],
+        fscal_ref[5], fscal_ref[6],
+        H=H, SEG=SEG, dt=dt, mtu=mtu, per_step_ecmp=per_step_ecmp,
+        policy=policy, segsum=segsum)
+    iroute_o[...] = out.iroute
+    eff_o[...] = out.eff
+    offered_o[...] = out.offered
+    q_o[...] = out.q
+    pred_o[...] = out.p_red
+    smin_o[...] = out.s_stepmin
+    spsn_o[...] = out.s_psnwin
+    salpha_o[...] = out.s_alpha
+    scnt_o[...] = out.s_cnt
+    scntop_o[...] = out.s_cntop
+
+
+# ----------------------------------------------------- tiled kernel body
+def _tiled_tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
+                       smin_ref, spsn_ref, salpha_ref, scnt_ref, scntop_ref,
+                       routes_ref, table_ref, npaths_ref, cap_ref, dom_ref,
+                       bgb_ref, bga_ref,
+                       job_ref, flow_ref, sps_ref, phase_ref, nph_ref,
+                       off_ref, chunk_ref, iscal_ref, fscal_ref,
+                       iroute_o, eff_o, offered_o, q_o, pred_o,
+                       smin_o, spsn_o, salpha_o, scnt_o, scntop_o,
+                       jobmin_s, offp_s, offhi_s, offlo_s,
+                       sl_s, shi_s, slo_s,
+                       cnt_s, cntop_s, cand_s, minact_s, stepmin_s, psnwin_s,
+                       *, H, SEG, FW, blk, dt, mtu, per_step_ecmp, policy):
+    """One tick, tiled over the instance axis: grid = (sweep, block).
+
+    Per-instance refs hold one ``blk``-row block (BlockSpec-sliced);
+    link/Symphony/static refs hold whole arrays.  The scratch refs
+    persist across grid steps and carry the cross-block partials.
+    """
+    s = pl.program_id(0)
+    b = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    istep = step_ref[...]
+    isent = sent_ref[...]
+    irate = rate_ref[...]
+    inst_job = job_ref[...]
+    inst_flow = flow_ref[...]
+    sps = sps_ref[...]
+    phase = phase_ref[...]
+    nph = nph_ref[...]
+    off = off_ref[...]
+    cap = cap_ref[...]
+    link_dom = dom_ref[...]
+    chunk_sched = chunk_ref[...]
+    tick, seed = iscal_ref[0], iscal_ref[1]
+    bg_period, sym_win, pq_on = iscal_ref[2], iscal_ref[3], iscal_ref[4]
+    bg_duty = fscal_ref[0]
+    red_kmin, red_kmax, red_pmax = fscal_ref[1], fscal_ref[2], fscal_ref[3]
+    tau, n_sample, alpha_max = fscal_ref[4], fscal_ref[5], fscal_ref[6]
+    J = chunk_sched.shape[0]
+    DJ = smin_ref.shape[0]
+    L = cap.shape[0] - 1
+
+    # ---- per-block instance view; edge-padded rows are masked inactive
+    valid = b * blk + jax.lax.broadcasted_iota(jnp.int32, (blk,), 0) < FW
+    iseg = (istep // sps) * nph + phase
+    ichunk = chunk_sched[inst_job, jnp.clip(iseg, 0, SEG - 1)]
+    iwire = iseg * WIRE_SEG + istep % sps + off
+    occupied = istep >= 0
+    retired = occupied & (istep < done_ref[...][inst_flow])
+    complete = occupied & (isent >= ichunk)
+    active = occupied & ~complete & ~retired & valid
+    ipsn = isent / mtu
+
+    if per_step_ecmp:
+        h = (inst_flow.astype(jnp.uint32) * jnp.uint32(2654435761)
+             + jnp.maximum(istep, 0).astype(jnp.uint32) * jnp.uint32(40503)
+             + (seed.astype(jnp.uint32) + 1) * jnp.uint32(2246822519))
+        h = (h ^ (h >> 13)) * jnp.uint32(2654435761)
+        h = h ^ (h >> 16)
+        n_p = npaths_ref[...][inst_flow].astype(jnp.uint32)
+        choice = (h % n_p).astype(jnp.int32)
+        iroute = table_ref[...][inst_flow, choice]
+    else:
+        iroute = routes_ref[...][inst_flow]
+    flat_links = iroute.reshape(-1)
+    w_rate = jnp.where(active, irate, 0.0)
+
+    bg_on = (tick % bg_period).astype(jnp.float32) < \
+        bg_duty * bg_period.astype(jnp.float32)
+    bg = bgb_ref[...] + jnp.where(bg_on, bga_ref[...], 0.0)
+
+    def block_lsum(acc, vals):
+        return _segadd(acc, flat_links, per_hop(vals, H), "onehot")
+
+    @pl.when((s == 0) & (b == 0))
+    def _init():
+        jobmin_s[...] = jnp.full(J, _BIG, jnp.int32)
+        offp_s[...] = jnp.zeros(L + 1, jnp.float32)
+        offhi_s[...] = jnp.zeros(L + 1, jnp.float32)
+        offlo_s[...] = jnp.zeros(L + 1, jnp.float32)
+        cnt_s[...] = jnp.zeros(DJ, jnp.float32)
+        cntop_s[...] = jnp.zeros(DJ, jnp.float32)
+        cand_s[...] = jnp.zeros(DJ, jnp.int32)
+        minact_s[...] = jnp.full(DJ, _BIG, jnp.int32)
+        psnwin_s[...] = jnp.zeros(DJ, jnp.float32)
+
+    # ---- sweep 0: job min-wire + proportional offered-load partials
+    @pl.when(s == 0)
+    def _sweep0():
+        jobmin_s[...] = _segmin(jobmin_s[...], inst_job,
+                                jnp.where(active, iwire, _BIG), "onehot")
+        offp_s[...] = block_lsum(offp_s[...], w_rate)
+
+    # ---- sweep 1: hi/lo-class offered partials (min-wire now complete)
+    @pl.when(s == 1)
+    def _sweep1():
+        is_hi = active & (iwire <= jobmin_s[...][inst_job])
+        offhi_s[...] = block_lsum(offhi_s[...], jnp.where(is_hi, irate, 0.0))
+        offlo_s[...] = block_lsum(offlo_s[...],
+                                  jnp.where(active & ~is_hi, irate, 0.0))
+
+    # ---- sweep 2, first block: finalize the per-link scale factors
+    @pl.when((s == 2) & (b == 0))
+    def _scales():
+        off_p = offp_s[...] + bg
+        sl_s[...] = jnp.minimum(1.0, cap / jnp.maximum(off_p, 1.0))
+        off_hi = offhi_s[...] + bg
+        s_hi = jnp.minimum(1.0, cap / jnp.maximum(off_hi, 1.0))
+        shi_s[...] = s_hi
+        rem = jnp.maximum(cap - off_hi * s_hi, 0.0)
+        slo_s[...] = rem / jnp.maximum(offlo_s[...], 1.0)
+
+    def eff_block():
+        is_hi = active & (iwire <= jobmin_s[...][inst_job])
+        eff_p = w_rate * sl_s[...][iroute].min(axis=1)
+        share = jnp.where(is_hi[:, None], shi_s[...][iroute],
+                          jnp.minimum(1.0, slo_s[...][iroute]))
+        eff_q = w_rate * share.min(axis=1)
+        if policy == "pq":
+            return eff_q
+        return jnp.where(pq_on != 0, eff_q, eff_p)
+
+    def dj_block():
+        dj = link_dom[iroute] * J + inst_job[:, None]
+        return dj, dj.reshape(-1)
+
+    # ---- sweep 2, per block: eff + Symphony cnt/cntop/step-min partials
+    @pl.when(s == 2)
+    def _sweep2():
+        eff = eff_block()
+        dj, djf = dj_block()
+        sm4 = smin_ref[...][dj].reshape(-1)
+        pkts = eff * dt / mtu
+        newly_done = active & (isent + eff * dt >= ichunk)
+        act4 = per_hop(active, H)
+        done4 = per_hop(newly_done, H)
+        wire4 = per_hop(iwire, H)
+        pkts4 = per_hop(pkts, H)
+        cnt_s[...] = _segadd(cnt_s[...], djf,
+                             jnp.where(act4, pkts4, 0.0), "onehot")
+        cntop_s[...] = _segadd(cntop_s[...], djf,
+                               jnp.where(act4 & (wire4 > sm4), pkts4, 0.0),
+                               "onehot")
+        cand_s[...] = _segmax(cand_s[...], djf,
+                              jnp.where(done4, wire4 + 1, 0), "onehot")
+        minact_s[...] = _segmin(minact_s[...], djf,
+                                jnp.where(act4 & ~done4, wire4, _BIG),
+                                "onehot")
+
+    # ---- sweep 3, first block: finalize the Symphony step-min
+    @pl.when((s == 3) & (b == 0))
+    def _stepmin():
+        cand = jnp.maximum(smin_ref[...], cand_s[...])
+        stepmin_s[...] = jnp.where(minact_s[...] < _BIG,
+                                   jnp.minimum(cand, minact_s[...]), cand)
+
+    # ---- sweep 3, per block: psn-window partials + per-instance outputs
+    @pl.when(s == 3)
+    def _sweep3():
+        eff = eff_block()
+        _, djf = dj_block()
+        pkts = eff * dt / mtu
+        newly_done = active & (isent + eff * dt >= ichunk)
+        send4 = per_hop(active & (eff > 1.0), H)
+        done4 = per_hop(newly_done, H)
+        wire4 = per_hop(iwire, H)
+        psn4 = per_hop(ipsn + pkts, H)
+        # state psn-window is always >= 0, so accumulating the >= 0
+        # partials from 0 and max-ing with the state at the flush equals
+        # the untiled segmax against the state directly
+        psnwin_s[...] = _segmax(psnwin_s[...], djf,
+                                jnp.where(send4 & ~done4 &
+                                          (wire4 == stepmin_s[...][djf]),
+                                          psn4, 0.0), "onehot")
+        iroute_o[...] = iroute
+        eff_o[...] = eff
+
+    # ---- last grid step: flush the link/Symphony outputs
+    @pl.when((s == 3) & (b == nb - 1))
+    def _flush():
+        off_p = offp_s[...] + bg
+        off_q = (offhi_s[...] + bg) + offlo_s[...]
+        if policy == "pq":
+            offered = off_q
+        else:
+            offered = jnp.where(pq_on != 0, off_q, off_p)
+        q = jnp.maximum(q_ref[...] + (offered - cap) * dt, 0.0)
+        q = _zero_null_link(q, L, "onehot")
+        offered_o[...] = offered
+        q_o[...] = q
+        pred_o[...] = jnp.clip((q - red_kmin) / (red_kmax - red_kmin),
+                               0.0, 1.0) * red_pmax
+        cnt = scnt_ref[...] + cnt_s[...]
+        cntop = scntop_ref[...] + cntop_s[...]
+        psnwin = jnp.maximum(spsn_ref[...], psnwin_s[...])
+        sym_epoch = (tick % sym_win) == (sym_win - 1)
+        have = cnt > n_sample
+        exceed = cntop >= tau * cnt
+        alpha_new = jnp.clip(
+            salpha_ref[...] + jnp.where(exceed, 1.0, -1.0) * have,
+            1.0, alpha_max)
+        smin_o[...] = stepmin_s[...]
+        spsn_o[...] = jnp.where(sym_epoch, 0.0, psnwin)
+        salpha_o[...] = jnp.where(sym_epoch, alpha_new, salpha_ref[...])
+        scnt_o[...] = jnp.where(sym_epoch, 0.0, cnt)
+        scntop_o[...] = jnp.where(sym_epoch, 0.0, cntop)
+
+
+def _edge_pad(x, n):
+    return jnp.pad(x, (0, n), mode="edge") if n else x
 
 
 # --------------------------------------------------------- entry point
@@ -252,6 +526,7 @@ def netsim_tick(step_of, sent, rate, done_upto, q_prev,
                 chunk_sched, iscal, fscal, *,
                 dt: float, mtu: float, per_step_ecmp: bool,
                 policy: str = "proportional", segsum: str = "scatter",
+                blk: int | None = None,
                 interpret: bool = True) -> TickOut:
     """One fused tick of the netsim hot path.
 
@@ -259,8 +534,13 @@ def netsim_tick(step_of, sent, rate, done_upto, q_prev,
     state ``[DJ]``.  ``iscal = [tick, seed, bg_period_ticks,
     sym_win_ticks, pq_on]`` (i32) and ``fscal = [bg_duty, red_kmin,
     red_kmax, red_pmax, tau, n_sample, alpha_max]`` (f32) carry the
-    traced scalars; ``dt``/``mtu``/``per_step_ecmp``/``policy`` are
-    compile-time (from :class:`SimStructure`).
+    traced scalars; ``dt``/``mtu``/``per_step_ecmp``/``policy``/``blk``
+    are compile-time (from :class:`SimStructure`).
+
+    ``blk`` < FW selects the tiled grid kernel (``segsum="onehot"``
+    only): per-instance operands are BlockSpec-tiled into ``blk``-row
+    blocks and the grid runs ``(TILED_SWEEPS, ceil(FW/blk))`` steps with
+    cross-block reduction partials in persistent scratch.
     """
     if policy not in ("proportional", "pq"):
         raise ValueError(f"kernel share policy must be proportional|pq, "
@@ -272,28 +552,100 @@ def netsim_tick(step_of, sent, rate, done_upto, q_prev,
     H = routes.shape[-1]
     L1 = cap.shape[0]
     DJ = s_stepmin.shape[0]
+    if blk is not None:
+        if segsum != "onehot":
+            raise ValueError(
+                f"blk={blk} tiling requires segsum='onehot' (Mosaic has no "
+                f"vector scatter), got segsum={segsum!r}")
+        if blk < 1:
+            raise ValueError(f"blk must be >= 1, got {blk}")
+    operands = (step_of, sent, rate, done_upto, q_prev,
+                s_stepmin, s_psnwin, s_alpha, s_cnt, s_cntop,
+                routes, path_table, n_paths, cap, link_dom, bg_base, bg_amp,
+                inst_job, inst_flow, sps_i, phase_i, nph_i, off_i,
+                chunk_sched, iscal, fscal)
+    out_shape = [
+        jax.ShapeDtypeStruct((FW, H), jnp.int32),   # iroute
+        jax.ShapeDtypeStruct((FW,), jnp.float32),   # eff
+        jax.ShapeDtypeStruct((L1,), jnp.float32),   # offered
+        jax.ShapeDtypeStruct((L1,), jnp.float32),   # q
+        jax.ShapeDtypeStruct((L1,), jnp.float32),   # p_red
+        jax.ShapeDtypeStruct((DJ,), jnp.int32),     # s_stepmin
+        jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_psnwin
+        jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_alpha
+        jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_cnt
+        jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_cntop
+    ]
+    if blk is None or blk >= FW:
+        kernel = functools.partial(
+            _tick_kernel, H=H, SEG=int(chunk_sched.shape[-1]), dt=float(dt),
+            mtu=float(mtu), per_step_ecmp=bool(per_step_ecmp), policy=policy,
+            segsum=segsum)
+        outs = pl.pallas_call(kernel, out_shape=out_shape,
+                              interpret=interpret)(*operands)
+        return TickOut(*outs)
+
+    # ---------- tiled dispatch: grid over (sweep, instance block)
+    blk = int(blk)
+    NB = -(-FW // blk)
+    pad = NB * blk - FW
+    J = int(chunk_sched.shape[0])
+
+    def pad_i(x):                      # [FW] -> [NB*blk]
+        return _edge_pad(x, pad)
+
+    operands = (pad_i(step_of), pad_i(sent), pad_i(rate), done_upto, q_prev,
+                s_stepmin, s_psnwin, s_alpha, s_cnt, s_cntop,
+                routes, path_table, n_paths, cap, link_dom, bg_base, bg_amp,
+                pad_i(inst_job), pad_i(inst_flow), pad_i(sps_i),
+                pad_i(phase_i), pad_i(nph_i), pad_i(off_i),
+                chunk_sched, iscal, fscal)
+
+    def blk_spec(a):                   # blocked per-instance operand
+        return pl.BlockSpec((blk,) + a.shape[1:],
+                            lambda s, b: (b,) + (0,) * (a.ndim - 1))
+
+    def full_spec(a):                  # whole-array operand
+        return pl.BlockSpec(a.shape, lambda s, b, nd=a.ndim: (0,) * nd)
+
+    blocked = {0, 1, 2, 17, 18, 19, 20, 21, 22}   # per-instance operands
+    in_specs = [blk_spec(a) if i in blocked else full_spec(a)
+                for i, a in enumerate(operands)]
+    out_shape_t = list(out_shape)
+    out_shape_t[0] = jax.ShapeDtypeStruct((NB * blk, H), jnp.int32)
+    out_shape_t[1] = jax.ShapeDtypeStruct((NB * blk,), jnp.float32)
+    out_specs = [
+        pl.BlockSpec((blk, H), lambda s, b: (b, 0)),    # iroute
+        pl.BlockSpec((blk,), lambda s, b: (b,)),        # eff
+    ] + [full_spec(sh) for sh in out_shape_t[2:]]
     kernel = functools.partial(
-        _tick_kernel, H=H, SEG=int(chunk_sched.shape[-1]), dt=float(dt),
-        mtu=float(mtu), per_step_ecmp=bool(per_step_ecmp), policy=policy,
-        segsum=segsum)
+        _tiled_tick_kernel, H=H, SEG=int(chunk_sched.shape[-1]), FW=FW,
+        blk=blk, dt=float(dt), mtu=float(mtu),
+        per_step_ecmp=bool(per_step_ecmp), policy=policy)
     outs = pl.pallas_call(
         kernel,
-        out_shape=[
-            jax.ShapeDtypeStruct((FW, H), jnp.int32),   # iroute
-            jax.ShapeDtypeStruct((FW,), jnp.float32),   # eff
-            jax.ShapeDtypeStruct((L1,), jnp.float32),   # offered
-            jax.ShapeDtypeStruct((L1,), jnp.float32),   # q
-            jax.ShapeDtypeStruct((L1,), jnp.float32),   # p_red
-            jax.ShapeDtypeStruct((DJ,), jnp.int32),     # s_stepmin
-            jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_psnwin
-            jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_alpha
-            jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_cnt
-            jax.ShapeDtypeStruct((DJ,), jnp.float32),   # s_cntop
+        grid=(TILED_SWEEPS, NB),
+        in_specs=in_specs,
+        out_shape=out_shape_t,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((J,), jnp.int32),        # jobmin
+            pltpu.VMEM((L1,), jnp.float32),     # off_p partials
+            pltpu.VMEM((L1,), jnp.float32),     # off_hi partials
+            pltpu.VMEM((L1,), jnp.float32),     # off_lo partials
+            pltpu.VMEM((L1,), jnp.float32),     # s_l scale
+            pltpu.VMEM((L1,), jnp.float32),     # s_hi scale
+            pltpu.VMEM((L1,), jnp.float32),     # s_lo scale
+            pltpu.VMEM((DJ,), jnp.float32),     # cnt partials
+            pltpu.VMEM((DJ,), jnp.float32),     # cntop partials
+            pltpu.VMEM((DJ,), jnp.int32),       # cand partials
+            pltpu.VMEM((DJ,), jnp.int32),       # min-active partials
+            pltpu.VMEM((DJ,), jnp.int32),       # finalized step-min
+            pltpu.VMEM((DJ,), jnp.float32),     # psn-window partials
         ],
         interpret=interpret,
-    )(step_of, sent, rate, done_upto, q_prev,
-      s_stepmin, s_psnwin, s_alpha, s_cnt, s_cntop,
-      routes, path_table, n_paths, cap, link_dom, bg_base, bg_amp,
-      inst_job, inst_flow, sps_i, phase_i, nph_i, off_i,
-      chunk_sched, iscal, fscal)
+    )(*operands)
+    outs = list(outs)
+    outs[0] = outs[0][:FW]
+    outs[1] = outs[1][:FW]
     return TickOut(*outs)

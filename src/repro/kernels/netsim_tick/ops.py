@@ -42,11 +42,50 @@ def kernel_policy(cfg) -> str:
     return "proportional"
 
 
+def plan_tiling(FW: int, blk: int | None, segsum: str,
+                tick_window: int) -> int | None:
+    """Validate and normalize the kernel tiling plan for an ``[FW]``
+    instance axis: returns the effective ``blk`` (``None`` = untiled).
+
+    * ``blk`` tiling requires the dense ``segsum="onehot"`` reductions —
+      the scatter variant cannot accumulate per-block partials without
+      the vector scatters the tiling exists to eliminate.
+    * ``blk >= FW`` normalizes to untiled (one whole-array block).
+    * ``tick_window > 1`` keeps the whole ``[FW]`` axis resident across
+      ticks, so it is mutually exclusive with ``blk < FW`` tiling.
+    """
+    if blk is None:
+        return None
+    if blk < 1:
+        raise ValueError(f"blk must be >= 1, got {blk}")
+    if int(blk) >= FW:
+        return None
+    if segsum != "onehot":
+        raise ValueError(
+            f"blk={blk} tiling requires segsum='onehot'; "
+            f"got segsum={segsum!r}")
+    if tick_window > 1:
+        raise ValueError(
+            f"blk={blk} < FW={FW} tiling cannot combine with "
+            f"tick_window={tick_window} > 1: the multi-tick window keeps "
+            "the whole instance axis resident across ticks")
+    return int(blk)
+
+
 def fused_tick(ctx, cfg, starts, state, tick, *,
-               segsum: str = "scatter",
+               segsum: str | None = None,
+               blk: int | None = None,
                interpret: bool | None = None) -> TickOut:
-    """Marshal engine state into the kernel's flat operands and run it."""
+    """Marshal engine state into the kernel's flat operands and run it.
+
+    ``segsum`` / ``blk`` default to the config's static fields (both
+    overridable for direct kernel tests)."""
     st = ctx.st
+    if segsum is None:
+        segsum = getattr(cfg, "segsum", "scatter")
+    if blk is None:
+        blk = getattr(cfg, "blk", None)
+    blk = plan_tiling(ctx.FW, blk, segsum, getattr(cfg, "tick_window", 1))
     i32 = lambda v: jnp.asarray(v, jnp.int32)
     f32 = lambda v: jnp.asarray(v, jnp.float32)
     iscal = jnp.stack([i32(tick), i32(st.seed), i32(st.bg_period_ticks),
@@ -64,15 +103,15 @@ def fused_tick(ctx, cfg, starts, state, tick, *,
         ctx.inst_job, ctx.inst_flow, ctx.sps_i, ctx.phase_i, ctx.nph_i,
         ctx.off_i, ctx.wl.chunk_sched, iscal, fscal,
         dt=cfg.dt, mtu=cfg.mtu, per_step_ecmp=cfg.per_step_ecmp,
-        policy=kernel_policy(cfg), segsum=segsum,
+        policy=kernel_policy(cfg), segsum=segsum, blk=blk,
         interpret=use_interpret() if interpret is None else interpret)
 
 
-def engine_tick_fused(ctx, cfg, state: EngineState, tick):
-    """One tick with the hot stages fused; same contract as
-    `stages.engine_tick_xla`: returns ``(state', metric sample)``."""
-    starts = stage_starts(ctx, state, tick)
-    out = fused_tick(ctx, cfg, starts, state, tick)
+def compose_tick(ctx, cfg, state: EngineState, tick, starts, out: TickOut):
+    """Compose the cheap stages around the fused hot-path outputs into the
+    engine-tick contract ``(state', metric sample)``.  Shared between the
+    per-tick path (XLA-side, around the pallas call) and the multi-tick
+    window kernel (replayed inside the kernel body per tick)."""
     inst = instance_view(ctx, starts, state, cfg.mtu, cfg.per_step_ecmp,
                          iroute=out.iroute)
     lam, _pkts, _sm = stage_marking(ctx, cfg, state, inst, out.p_red,
@@ -94,3 +133,31 @@ def engine_tick_fused(ctx, cfg, state: EngineState, tick):
         key=key,
     )
     return new_state, sample
+
+
+def engine_tick_fused(ctx, cfg, state: EngineState, tick):
+    """One tick with the hot stages fused; same contract as
+    `stages.engine_tick_xla`: returns ``(state', metric sample)``."""
+    starts = stage_starts(ctx, state, tick)
+    out = fused_tick(ctx, cfg, starts, state, tick)
+    return compose_tick(ctx, cfg, state, tick, starts, out)
+
+
+def engine_window_fused(ctx, cfg, state: EngineState, base_tick, n: int):
+    """Run ``n`` consecutive ticks inside ONE kernel invocation.
+
+    The whole tick — start gating, the fused hot stages, marking,
+    progress, rate control, segments, metrics — executes inside the
+    Pallas kernel with the engine state carried through an in-kernel
+    ``fori_loop``, so link/Symphony/instance state round-trips HBM once
+    per window instead of once per tick.  Returns ``(state after n
+    ticks, metric sample of the last tick)``.
+    """
+    from .window import netsim_window
+    plan_tiling(ctx.FW, getattr(cfg, "blk", None),
+                getattr(cfg, "segsum", "scatter"),
+                getattr(cfg, "tick_window", 1))
+    return netsim_window(ctx, cfg, state, base_tick, n,
+                         policy=kernel_policy(cfg),
+                         segsum=getattr(cfg, "segsum", "scatter"),
+                         interpret=use_interpret())

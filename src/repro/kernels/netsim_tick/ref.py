@@ -18,6 +18,21 @@ def tick_ref(ctx, cfg, state, tick):
     return engine_tick_xla(ctx, cfg, state, tick)
 
 
+def window_ref(ctx, cfg, state, base_tick, n: int):
+    """Oracle for `ops.engine_window_fused`: ``n`` staged-XLA ticks from
+    ``base_tick``, returning the final state and the LAST tick's sample
+    (the window kernel's contract)."""
+    import jax
+    import jax.numpy as jnp
+
+    def body(st, t):
+        return engine_tick_xla(ctx, cfg, st, t)
+
+    ticks = base_tick + jnp.arange(n)
+    state, samples = jax.lax.scan(body, state, ticks)
+    return state, jax.tree.map(lambda x: x[-1], samples)
+
+
 def fused_outputs_ref(ctx, cfg, starts, state, tick) -> TickOut:
     """Per-output oracle for `kernel.netsim_tick`: the same
     :class:`TickOut` assembled from the individual stage functions."""

@@ -6,6 +6,8 @@ per-output on single ticks and tick-for-tick through whole runs — the
 seed golden chain (Table-1 finish-tick constants) must hold unchanged
 under ``backend="pallas"``.
 """
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -177,3 +179,245 @@ def test_golden_table1_pallas_balanced_and_pq():
     assert int(bal.job_finish_ticks[0]) == GOLDEN_JOB["balanced_sym"]
     pq = simulate(topo, wl, cfg._replace(pq_on=True), routing="ecmp", seed=3)
     assert int(pq.job_finish_ticks[0]) == GOLDEN_JOB["ecmp_pq"]
+
+
+# ---------------------------------------------- tiled grid kernel (blk)
+def _count_pallas_calls(jaxpr):
+    """Recursively count pallas_call eqns (and collect their grids)."""
+    found = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                found.append(eqn.params.get("grid_mapping"))
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    walk(v.jaxpr)
+                elif isinstance(v, (tuple, list)):
+                    for u in v:
+                        if hasattr(u, "jaxpr"):
+                            walk(u.jaxpr)
+    walk(jaxpr)
+    return found
+
+
+@pytest.mark.parametrize("blk", [16, 24, 4096])
+def test_tiled_blk_sweep_matches_staged(blk):
+    """blk in {divides FW=64, doesn't divide, >= FW (untiled)}: the tiled
+    onehot grid kernel matches the staged engine through whole runs —
+    int outputs exact, float series allclose (dense reductions and
+    cross-block partial accumulation reassociate adds)."""
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=300, window=8)
+    x = simulate(topo, wl, cfg._replace(sym_on=True), routing="ecmp", seed=3)
+    t = simulate(topo, wl,
+                 cfg._replace(sym_on=True, backend="pallas",
+                              segsum="onehot", blk=blk),
+                 routing="ecmp", seed=3)
+    for f in x._fields:
+        a, b = np.asarray(getattr(x, f)), np.asarray(getattr(t, f))
+        if a.dtype.kind == "i":
+            assert np.array_equal(a, b), f"blk={blk}: {f}"
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"blk={blk}: {f}")
+
+
+def test_blk_requires_onehot():
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=100, window=8, backend="pallas", blk=16)
+    with pytest.raises(ValueError, match="onehot"):
+        simulate(topo, wl, cfg, routing="ecmp", seed=0)
+
+
+# -------------------------------------------- multi-tick window (fusion)
+@pytest.mark.parametrize("tw", [1, 5, 7])
+def test_tick_window_sweep_matches_staged(tw):
+    """tick_window in {1, divides record_every=20, doesn't divide}: the
+    multi-tick window kernel stays bit-for-bit with the staged engine
+    (the kernel body replays the stage functions per tick, so op order
+    is identical)."""
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=300, window=8, record_every=20)
+    for variant in (dict(), dict(sym_on=True), dict(pq_on=True)):
+        x = simulate(topo, wl, cfg._replace(**variant), routing="ecmp",
+                     seed=3)
+        w = simulate(topo, wl,
+                     cfg._replace(backend="pallas", tick_window=tw,
+                                  **variant),
+                     routing="ecmp", seed=3)
+        _assert_results_equal(x, w, f"tick_window={tw} {variant}")
+
+
+def test_tick_window_requires_pallas_backend():
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=100, window=8, tick_window=5)
+    with pytest.raises(ValueError, match="pallas"):
+        simulate(topo, wl, cfg, routing="ecmp", seed=0)
+    # wfq falls back to the staged XLA path -> same rejection
+    cfg = cfg._replace(backend="pallas", share_policy="wfq")
+    with pytest.raises(ValueError, match="pallas"):
+        simulate(topo, wl, cfg, routing="ecmp", seed=0)
+
+
+def test_tick_window_excludes_blk_tiling():
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=100, window=8, backend="pallas",
+                    segsum="onehot", blk=16, tick_window=5)
+    with pytest.raises(ValueError, match="tick_window"):
+        simulate(topo, wl, cfg, routing="ecmp", seed=0)
+
+
+def test_wfq_fallback_warns_once():
+    from repro.core.netsim import stages
+
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=40, window=8, backend="pallas",
+                    share_policy="wfq")
+    stages._FALLBACK_WARNED.discard("wfq")
+    with pytest.warns(UserWarning, match="falls back"):
+        simulate(topo, wl, cfg, routing="ecmp", seed=0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")   # second resolve must stay silent
+        assert resolve_backend(cfg) == "xla"
+
+
+# ------------------------------------- lane batching: ONE kernel dispatch
+def test_grid_lanes_dispatch_single_pallas_call():
+    """A simulate_grid batch of 8 lanes through the tiled onehot kernel
+    traces to exactly ONE pallas_call whose grid is lane-leading
+    [lanes, sweeps, FW_blocks] — vmap batches the grid, it does not
+    replicate the kernel."""
+    from repro.core.netsim import simulator as sim
+
+    topo, wl = _small()
+    base = SimParams(n_ticks=40, window=8, backend="pallas",
+                     segsum="onehot", blk=16)
+    struct = base.structure()
+    pts = [base._replace(sym_on=bool(i % 2)).knobs() for i in range(4)]
+    from repro.core.netsim.params import stack_knobs
+    knobs = stack_knobs(pts)
+    st = build_static(topo, wl, "ecmp", seed=3, dt=base.dt,
+                      deploy=base.deploy)
+    wla = wl_arrays(wl, base.dt)
+    st_stack = jax.tree.map(lambda x: jnp.stack([x, x]), st)
+    keys = jnp.stack([jax.random.PRNGKey(0), jax.random.PRNGKey(1)])
+
+    jx = jax.make_jaxpr(
+        lambda s, kn, ky: sim._grid_impl(s, wla, struct, kn, ky))(
+            st_stack, knobs, keys)
+    calls = _count_pallas_calls(jx.jaxpr)
+    assert len(calls) == 1, f"expected 1 pallas_call, got {len(calls)}"
+    grid = calls[0].grid
+    FW = wla.src.shape[0] * base.window
+    nb = -(-FW // 16)
+    assert grid[0] == 8, f"lane axis not leading: grid={grid}"   # 4 knobs x 2 seeds
+    assert tuple(grid[1:]) == (4, nb), f"grid={grid}"
+
+
+def test_window_kernel_single_dispatch_under_grid():
+    """The multi-tick window kernel also batches to one pallas_call per
+    scan body under an 8-lane grid."""
+    from repro.core.netsim import simulator as sim
+    from repro.core.netsim.params import stack_knobs
+
+    topo, wl = _small()
+    base = SimParams(n_ticks=40, window=8, record_every=20,
+                     backend="pallas", tick_window=5)
+    struct = base.structure()
+    knobs = stack_knobs([base._replace(sym_on=bool(i % 2)).knobs()
+                         for i in range(8)])
+    st = build_static(topo, wl, "ecmp", seed=3, dt=base.dt,
+                      deploy=base.deploy)
+    wla = wl_arrays(wl, base.dt)
+    st_stack = jax.tree.map(lambda x: x[None], st)
+    keys = jax.random.PRNGKey(0)[None]
+
+    jx = jax.make_jaxpr(
+        lambda s, kn, ky: sim._grid_impl(s, wla, struct, kn, ky))(
+            st_stack, knobs, keys)
+    calls = _count_pallas_calls(jx.jaxpr)
+    assert len(calls) == 1, f"expected 1 pallas_call, got {len(calls)}"
+
+
+# --------------------------------------------- Mosaic-readiness (static)
+def test_tiled_onehot_stablehlo_scatter_free():
+    """CI Mosaic gate: the tiled onehot kernel's lowering contains NO
+    scatter ops — the dense segment reductions plus the iota-select
+    null-link zeroing removed every vector scatter from the hot path —
+    and the full 8-lane grid dispatch is a single pallas_call."""
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=40, window=8, sym_on=True)
+    st = build_static(topo, wl, "ecmp", seed=3, dt=cfg.dt, deploy=cfg.deploy)
+    ctx = make_ctx(st, wl_arrays(wl, cfg.dt), cfg.window)
+    state = init_state(ctx, jax.random.PRNGKey(0))
+    starts = stage_starts(ctx, state, 0)
+
+    def tiled(s, st_, t):
+        return fused_tick(ctx, cfg, s, st_, t, segsum="onehot", blk=16)
+
+    batched = jax.vmap(tiled, in_axes=(None, None, 0))
+    ticks = jnp.arange(8, dtype=jnp.int32)
+    jx = jax.make_jaxpr(batched)(starts, state, ticks)
+    assert len(_count_pallas_calls(jx.jaxpr)) == 1
+    txt = jax.jit(batched).trace(starts, state, ticks).lower(
+        lowering_platforms=("tpu",)).as_text()
+    n_scatter = txt.count("stablehlo.scatter")
+    assert n_scatter == 0, f"{n_scatter} scatter ops in tiled onehot HLO"
+
+
+def test_golden_table1_tick_window_and_tiled():
+    """Acceptance: the multi-tick window kernel (scatter, bit-for-bit)
+    and the tiled onehot grid kernel (allclose floats; finish ticks are
+    ints) both land the seed golden finish ticks on Table 1."""
+    topo, wl = _table1()
+    cfg = SimParams(n_ticks=20_000, window=64, backend="pallas")
+    for c in (cfg._replace(tick_window=5),
+              cfg._replace(segsum="onehot", blk=256)):
+        base = simulate(topo, wl, c, routing="ecmp", seed=3)
+        assert int(base.job_finish_ticks[0]) == GOLDEN_JOB["ecmp_base"]
+        sym = simulate(topo, wl, c._replace(sym_on=True), routing="ecmp",
+                       seed=3)
+        assert int(sym.job_finish_ticks[0]) == GOLDEN_JOB["ecmp_sym"]
+
+
+@pytest.mark.slow
+def test_golden_table1_tick_window_balanced_and_pq():
+    topo, wl = _table1()
+    cfg = SimParams(n_ticks=20_000, window=64, backend="pallas",
+                    tick_window=5)
+    bal = simulate(topo, wl, cfg._replace(sym_on=True), routing="balanced",
+                   seed=3)
+    assert int(bal.job_finish_ticks[0]) == GOLDEN_JOB["balanced_sym"]
+    pq = simulate(topo, wl, cfg._replace(pq_on=True), routing="ecmp", seed=3)
+    assert int(pq.job_finish_ticks[0]) == GOLDEN_JOB["ecmp_pq"]
+
+
+def test_window_kernel_bitwise_vs_window_ref():
+    """Direct window-vs-oracle check on a nontrivial mid-run state: one
+    engine_window_fused call equals n staged ticks, bitwise (both sides
+    jitted — same contract as the single-tick oracle tests)."""
+    from repro.kernels.netsim_tick import window_ref
+    from repro.kernels.netsim_tick.ops import engine_window_fused
+
+    topo, wl = _small()
+    cfg = SimParams(n_ticks=100, window=8, sym_on=True, backend="pallas",
+                    tick_window=5)
+    st = build_static(topo, wl, "ecmp", seed=3, dt=cfg.dt, deploy=cfg.deploy)
+    ctx = make_ctx(st, wl_arrays(wl, cfg.dt), cfg.window)
+    from repro.core.netsim.params import merge_params
+    struct, knobs = cfg.split()
+    ecfg = merge_params(struct, knobs)
+    state = init_state(ctx, jax.random.PRNGKey(0))
+    # advance 20 ticks so queues/Symphony windows are warm
+    for t in range(20):
+        state, _ = engine_tick_xla(ctx, ecfg, state, t)
+    run_k = jax.jit(lambda s, t: engine_window_fused(ctx, ecfg, s, t, 5))
+    run_r = jax.jit(lambda s, t: window_ref(ctx, ecfg, s, t, 5))
+    ks, ksmp = run_k(state, jnp.int32(20))
+    rs, rsmp = run_r(state, jnp.int32(20))
+    for f in ks._fields:
+        assert np.array_equal(np.asarray(getattr(ks, f)),
+                              np.asarray(getattr(rs, f))), f
+    for i, (a, b) in enumerate(zip(ksmp, rsmp)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), f"sample[{i}]"
