@@ -53,13 +53,20 @@ BENCH_FILE = Path(__file__).resolve().parents[1] / "BENCH_netsim.json"
 # record the per-mode snapshot entries cannot provide.
 BENCH_SCHEMA = 3
 
+# The gather-free tiled kernel configuration: packed per-block route
+# tables streamed via BlockSpec + scalar prefetch remove every gather
+# AND scatter from the tiled onehot lowering (the Mosaic-ready shape).
+# Benchmarked as its own trajectory variant alongside the tuned window.
+GATHERFREE_TUNING = {"segsum": "onehot", "blk": 256, "tick_window": 1}
+
 # single source of truth for the benchmark parameters and the cache key
 CONFIG = dict(n_ticks=2_000 if QUICK else 30_000,
               taus=(0.1, 0.2, 0.25, 0.5), ks=(1e-3, 3e-3, 1e-2, 3e-2),
               n_seeds=4 if QUICK else 8,
               grid_seeds=1 if QUICK else 2,
               backends=("xla", "pallas"),
-              tuning=kernel_tuning())
+              tuning=kernel_tuning(),
+              gatherfree=GATHERFREE_TUNING)
 
 
 def _git_sha() -> str:
@@ -115,7 +122,11 @@ def backend_compare(topo, wl, cfg):
                 # the trajectory configuration: the fused kernel with the
                 # multi-tick window (and any BENCH_SEGSUM/BENCH_BLK
                 # overrides) — what BENCH_netsim.json tracks across PRs
-                ("pallas_tuned", cfg._replace(backend="pallas", **tuning))]
+                ("pallas_tuned", cfg._replace(backend="pallas", **tuning)),
+                # the gather-free Mosaic-ready tiled configuration — the
+                # second tracked trajectory variant
+                ("pallas_gatherfree",
+                 cfg._replace(backend="pallas", **GATHERFREE_TUNING))]
     out = {}
     for be, c in variants:
         t0 = time.time()
@@ -134,6 +145,9 @@ def backend_compare(topo, wl, cfg):
         out["pallas"]["ticks_per_s"] / out["xla"]["ticks_per_s"], 2)
     out["pallas_tuned_vs_xla"] = round(
         out["pallas_tuned"]["ticks_per_s"] / out["xla"]["ticks_per_s"], 2)
+    out["pallas_gatherfree_vs_xla"] = round(
+        out["pallas_gatherfree"]["ticks_per_s"] / out["xla"]["ticks_per_s"],
+        2)
     return out
 
 
@@ -276,25 +290,34 @@ def write_bench(result) -> dict:
                  "mesh_shape": [n_dev]},
         "result": result,
     }
-    # ---- append-only per-PR trajectory (re-running on the same commit
-    # and mode updates that entry in place instead of duplicating it)
-    tuning = CONFIG["tuning"]
-    entry = {
-        "sha": _git_sha(),
-        "mode": _mode(),
-        "backend": "pallas",
-        "segsum": tuning["segsum"],
-        "blk": tuning["blk"],
-        "tick_window": tuning["tick_window"],
-        "lanes": result.get("grid_lanes"),
-        "ticks_per_s": result["backends"]["pallas_tuned"]["ticks_per_s"],
-        "ticks_per_s_xla": result["backends"]["xla"]["ticks_per_s"],
-        "device_count": jax.device_count(),
-    }
-    traj = [e for e in data.get("trajectory", [])
-            if not (e.get("sha") == entry["sha"]
-                    and e.get("mode") == entry["mode"])]
-    traj.append(entry)
+    # ---- append-only per-PR trajectory, one entry per kernel variant
+    # (re-running on the same commit, mode, and variant updates that
+    # entry in place instead of duplicating it; entries from before the
+    # variant field carried the tuned configuration, so missing variant
+    # reads as "pallas_tuned")
+    sha = _git_sha()
+    traj = data.get("trajectory", [])
+    for variant, tuning in (("pallas_tuned", CONFIG["tuning"]),
+                            ("pallas_gatherfree", GATHERFREE_TUNING)):
+        entry = {
+            "sha": sha,
+            "mode": _mode(),
+            "variant": variant,
+            "backend": "pallas",
+            "segsum": tuning["segsum"],
+            "blk": tuning["blk"],
+            "tick_window": tuning["tick_window"],
+            "lanes": result.get("grid_lanes"),
+            "ticks_per_s": result["backends"][variant]["ticks_per_s"],
+            "ticks_per_s_xla": result["backends"]["xla"]["ticks_per_s"],
+            "device_count": jax.device_count(),
+        }
+        traj = [e for e in traj
+                if not (e.get("sha") == entry["sha"]
+                        and e.get("mode") == entry["mode"]
+                        and e.get("variant", "pallas_tuned")
+                        == entry["variant"])]
+        traj.append(entry)
     data["trajectory"] = traj
     BENCH_FILE.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
     return data
@@ -307,6 +330,7 @@ _GATED = (("ticks_per_s_single",), ("ticks_per_s_vmap",),
           ("backends", "xla", "ticks_per_s"),
           ("backends", "pallas", "ticks_per_s"),
           ("backends", "pallas_tuned", "ticks_per_s"),
+          ("backends", "pallas_gatherfree", "ticks_per_s"),
           ("grid_speedup_multi_device",))
 # Warn below 0.5x committed: CI runs on shared 2-core VMs whose absolute
 # throughput swings widely run-to-run, so the gate is loose and warn-only —
@@ -347,26 +371,29 @@ def check() -> int:
             warned = True
         print(line)
     # ---- trajectory gate: fresh fused-kernel throughput vs the newest
-    # committed trajectory entry for this mode (same warn-only contract)
-    traj = [e for e in data.get("trajectory", [])
-            if e.get("mode") == _mode()
-            and isinstance(e.get("ticks_per_s"), (int, float))]
-    if traj:
+    # committed trajectory entry for this mode AND variant (same
+    # warn-only contract; pre-variant entries read as pallas_tuned)
+    for variant in ("pallas_tuned", "pallas_gatherfree"):
+        traj = [e for e in data.get("trajectory", [])
+                if e.get("mode") == _mode()
+                and e.get("variant", "pallas_tuned") == variant
+                and isinstance(e.get("ticks_per_s"), (int, float))]
+        if not traj:
+            print(f"  trajectory[{variant}]: no committed entry for mode "
+                  f"'{_mode()}' yet")
+            continue
         last = traj[-1]
         want = last["ticks_per_s"]
-        have = fresh["backends"]["pallas_tuned"]["ticks_per_s"]
-        print(f"  trajectory[{last.get('sha')}].ticks_per_s: {have} vs "
-              f"committed {want} ({have / want:.2f}x; segsum="
+        have = fresh["backends"][variant]["ticks_per_s"]
+        print(f"  trajectory[{last.get('sha')}/{variant}].ticks_per_s: "
+              f"{have} vs committed {want} ({have / want:.2f}x; segsum="
               f"{last.get('segsum')} blk={last.get('blk')} "
               f"tick_window={last.get('tick_window')})")
         if want > 0 and have < CHECK_RATIO * want:
             print(f"::warning title=netsim_perf trajectory regression::"
-                  f"pallas_tuned {have} < {CHECK_RATIO} * committed {want} "
+                  f"{variant} {have} < {CHECK_RATIO} * committed {want} "
                   f"(entry {last.get('sha')})")
             warned = True
-    else:
-        print("  trajectory: no committed entry for mode "
-              f"'{_mode()}' yet")
     host = entry.get("host", {})
     print(f"  committed on {host.get('cpu_count')}-core "
           f"{host.get('machine')} / jax {host.get('jax')}; warn-only "

@@ -251,14 +251,85 @@ def netsim_tick_tiled(blk: int = 256, tick_window: int = 5):
         "note": "tiled: streamed blocks re-fetched once per sweep, "
                 "resident arrays fetched once (Mosaic skips re-fetch on "
                 "unchanged block index); windowed: state HBM round-trips "
-                "amortized 1/tick_window (tiling and windows are "
-                "mutually exclusive — see ops.plan_tiling)",
+                "amortized 1/tick_window (blk + tick_window combine by "
+                "normalizing to the window kernel — params.plan_tiling)",
+    }
+
+
+def netsim_tick_gatherfree(blk: int = 256):
+    """Analytic model of the gather-free tiled kernel: the packed
+    per-instance route tables (``params.pack_route_tables``) replace every
+    in-kernel gather with BlockSpec-streamed dense slabs + iota-selects.
+
+    Costs: the table slabs — ``[blk, SEG]`` chunk schedules, two
+    ``[blk, P, H]`` ECMP candidate planes, ``[blk]`` path counts, plus the
+    instance-expanded done column — cross HBM once per sweep per block
+    like the other streamed operands.  Buys: the resident gather tables
+    (routes, path_table, n_paths, chunk_sched, link_dom) drop out of the
+    kernel entirely, and the lowering carries **zero** gathers and
+    scatters (Mosaic-lowerable; the scalar-prefetched per-block valid
+    counts keep block shapes static so next-block table DMA overlaps
+    compute).  Net: more streamed bytes than the gather-based tiling, in
+    exchange for a lowering Mosaic can compile at all — the relevant
+    ceiling comparison is against the staged engine, not the
+    interpret-only gather-based tiling.
+    """
+    from repro.core.netsim import build_static
+    from repro.core.netsim.simulator import wl_arrays
+    from repro.core.netsim.stages import make_ctx
+
+    from .common import build_scenario
+
+    topo, wl, cfg, _ = build_scenario("table1_ring", passes=2)
+    st = build_static(topo, wl, "ecmp", 0, dt=cfg.dt, deploy=cfg.deploy)
+    ctx = make_ctx(st, wl_arrays(wl, cfg.dt), cfg.window)
+    P = int(st.path_table.shape[1])
+    SEG = int(ctx.wl.chunk_sched.shape[1])
+    F, W, H, L, D, J = ctx.F, ctx.W, ctx.H, ctx.L, ctx.D, ctx.J
+    io, inter = _tick_arrays(F, W, H, L, D, J, P, SEG)
+    FW, L1 = F * W, L + 1
+    nb = -(-FW // blk)
+    io_b = sum(n * w for n, w in io.values())
+    staged = io_b + 2 * sum(n * w for n, w in inter.values())
+
+    stream_base = sum(n * w for k, (n, w) in io.items()
+                      if k in _BLOCK_STREAMED_IN)
+    stream_out = sum(n * w for k, (n, w) in io.items()
+                     if k in _BLOCK_STREAMED_OUT)
+    # packed-table slabs: chunk [FW,SEG], cand+cand_dom [FW,P,H] x2,
+    # n_paths [FW], plus done_upto expanded [F] -> [FW]
+    table_stream = (FW * SEG + 2 * FW * P * H + 2 * FW) * 4
+    # resident gather tables the slabs replace: routes/path_table/n_paths
+    # (static_routes), chunk_sched, link_dom, and the [F] done column
+    removed = (F * H + F * P * H + F + J * SEG + L1 + F) * 4
+    resident = io_b - stream_base - stream_out - removed
+    stream_in = stream_base + table_stream
+    tiled = _TILED_SWEEPS * stream_in + resident + stream_out
+    vmem_block = (stream_in + stream_out) // FW * blk + resident
+
+    return {
+        "scenario": "table1_ring",
+        "blk": blk, "n_blocks": nb, "ecmp_paths": P,
+        "table_stream_bytes_per_tick": _TILED_SWEEPS * table_stream,
+        "removed_gather_table_bytes": removed,
+        "bytes_per_tick_staged": staged,
+        "bytes_per_tick_gatherfree": tiled,
+        "vmem_working_set_kib": round(vmem_block / 1024, 1),
+        "fusion_ratio_gatherfree": round(staged / tiled, 2),
+        "ticks_per_s_hbm_ceiling_gatherfree": round(HBM / tiled),
+        "stablehlo": {"gather": 0, "scatter": 0},
+        "note": "table slabs stream once per sweep per block via "
+                "BlockSpec; scalar-prefetched per-block valid counts "
+                "overlap next-block table DMA with compute; zero "
+                "gather/scatter is CI-gated "
+                "(test_tiled_onehot_stablehlo_scatter_free_and_gather_free)",
     }
 
 
 def bench():
     out = {"netsim_tick": netsim_tick_traffic(),
-           "netsim_tick_tiled": netsim_tick_tiled()}
+           "netsim_tick_tiled": netsim_tick_tiled(),
+           "netsim_tick_gatherfree": netsim_tick_gatherfree()}
     if RESULTS.exists():
         out["rows"] = rows("single")
     else:

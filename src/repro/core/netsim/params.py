@@ -22,6 +22,14 @@ The config layer has three faces:
 Boolean knobs (``sym_on``, ``pq_on``) become 0/1 gates: the engine
 always traces both sides and selects, so a single compiled program
 serves baseline, PQ, and Symphony points of a grid.
+
+This module also owns the kernel *tiling plan* (:func:`plan_tiling`) and
+the trace-time route-table packer (:class:`PackedTables` /
+:func:`pack_route_tables`): per-instance dense copies of every table the
+tick kernel used to gather from (`routes[inst_flow]`, the ECMP candidate
+slab, `chunk_sched[inst_job]`), so the tiled Pallas kernel can stream
+them block-by-block and stay gather-free (Mosaic has no vector-gather
+lowering).
 """
 from __future__ import annotations
 
@@ -211,3 +219,78 @@ def grid_from_params(cfgs: Sequence[SimParams]
             f"grid points differ in static structure (fields {diff}); "
             "sweep only RuntimeKnobs fields, or run separate grids")
     return cfgs[0].structure(), stack_knobs([cfg.knobs() for cfg in cfgs])
+
+
+# ------------------------------------------------ kernel tiling + tables
+class PackedTables(NamedTuple):
+    """Per-instance dense route/chunk/ECMP tables for the tick kernel.
+
+    Every array leads with the flat ``[FW]`` instance axis, so the tiled
+    grid kernel can BlockSpec-stream them in ``blk``-row slabs (edge-
+    padded like the other per-instance operands) and every former
+    ``table[index]`` gather becomes a block-local row read or an
+    iota-select.  Packed once per trace by :func:`pack_route_tables`
+    (``jnp.repeat`` over the window axis — broadcast + reshape, itself
+    gather-free), carried on ``EngineCtx.tables``.
+    """
+    routes: jax.Array     # [FW, H]    static per-instance route links
+    route_dom: jax.Array  # [FW, H]    Symphony domain of each static hop
+    cand: jax.Array       # [FW, P, H] ECMP candidate paths per instance
+    cand_dom: jax.Array   # [FW, P, H] domains of the candidate hops
+    n_paths: jax.Array    # [FW]       valid candidate count per instance
+    chunk: jax.Array      # [FW, SEG]  per-instance segment chunk sizes
+
+
+def pack_route_tables(st, wl, window: int) -> PackedTables:
+    """Expand the per-flow/per-job tables to the ``[FW]`` instance axis.
+
+    ``st`` needs ``routes``/``path_table``/``n_paths``/``link_dom``;
+    ``wl`` needs ``job``/``chunk_sched`` (duck-typed: `simulator.Static`
+    and `stages.WLArrays`).  The window expansion is ``jnp.repeat(x, W,
+    axis=0)`` — row ``f*W + w`` holds flow ``f``'s table, matching the
+    ``inst_flow``/``inst_job`` layout of `stages.make_ctx`.
+    """
+    W = int(window)
+
+    def per_inst(x):
+        return jnp.repeat(x, W, axis=0)
+
+    return PackedTables(
+        routes=per_inst(st.routes),
+        route_dom=per_inst(st.link_dom[st.routes]),
+        cand=per_inst(st.path_table),
+        cand_dom=per_inst(st.link_dom[st.path_table]),
+        n_paths=per_inst(st.n_paths),
+        chunk=per_inst(wl.chunk_sched[wl.job]),
+    )
+
+
+def plan_tiling(FW: int, blk: int | None, segsum: str,
+                tick_window: int) -> int | None:
+    """Validate and normalize the kernel tiling plan for an ``[FW]``
+    instance axis: returns the effective ``blk`` (``None`` = untiled).
+
+    * ``blk >= FW`` normalizes to untiled (one whole-array block).
+    * ``blk`` tiling requires the dense ``segsum="onehot"`` reductions —
+      the scatter variant cannot accumulate per-block partials without
+      the vector scatters the tiling exists to eliminate.
+    * ``tick_window > 1`` dispatches through the multi-tick window
+      kernel, which keeps the whole ``[FW]`` axis (and the packed route
+      tables) VMEM-resident across its in-kernel ``fori_loop`` — so the
+      single-tick grid tiling normalizes away and ``blk`` combines
+      freely with windowing (the combined ``blk x tick_window`` config
+      is golden-tested).
+    """
+    if blk is None:
+        return None
+    if blk < 1:
+        raise ValueError(f"blk must be >= 1, got {blk}")
+    if int(blk) >= FW:
+        return None
+    if segsum != "onehot":
+        raise ValueError(
+            f"blk={blk} tiling requires segsum='onehot'; "
+            f"got segsum={segsum!r}")
+    if tick_window > 1:
+        return None
+    return int(blk)

@@ -259,6 +259,11 @@ def _core_impl(st: Static, wl: WLArrays, struct: SimStructure,
     w = min(w, R)
 
     if w > 1:
+        # The window kernel donates the carried engine state: each pallas
+        # call aliases its N_STATE state inputs to the state outputs
+        # (window.py input_output_aliases), so this record-period scan
+        # updates the state buffers in place — no extra state copy per
+        # window on the pallas path.
         from ...kernels.netsim_tick.ops import engine_window_fused
         n_full, rem = divmod(R, w)
 

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..symphony import marking_probability
+from .params import PackedTables, pack_route_tables
 
 # Wire-step encoding: global segment index * WIRE_SEG + step-within-segment.
 # Monotone across segments; comparable across flows inside a segment.
@@ -99,6 +100,9 @@ class EngineCtx:
     inst_flow: jax.Array     # [FW]
     sps_i: jax.Array; phase_i: jax.Array; nph_i: jax.Array; off_i: jax.Array
     iroute_static: jax.Array  # [FW, H]
+    # per-instance dense route/chunk/ECMP tables (params.PackedTables):
+    # the gather-free tiled kernel streams these instead of gathering.
+    tables: PackedTables | None = None
 
     @property
     def FW(self) -> int:
@@ -109,7 +113,8 @@ class EngineCtx:
         return self.wl.chunk_sched[job_ids, jnp.clip(seg, 0, max_seg - 1)]
 
 
-def make_ctx(st, wl: WLArrays, window: int) -> EngineCtx:
+def make_ctx(st, wl: WLArrays, window: int,
+             tables: PackedTables | None = None) -> EngineCtx:
     F = int(wl.src.shape[0])
     J = int(wl.n_phases.shape[0])
     W = window
@@ -132,6 +137,7 @@ def make_ctx(st, wl: WLArrays, window: int) -> EngineCtx:
         iroute_static=jnp.broadcast_to(
             st.routes[:, None, :], (F, W, st.routes.shape[-1])
         ).reshape(FW, st.routes.shape[-1]),
+        tables=pack_route_tables(st, wl, W) if tables is None else tables,
     )
 
 

@@ -4,13 +4,13 @@ Selected via ``SimParams(backend="pallas")``; the staged XLA engine in
 `core/netsim/stages.py` stays the golden reference (`ref.py`).
 """
 from .kernel import SEGSUM_MODES, TickOut, hot_tick, netsim_tick
-from .ops import (engine_tick_fused, engine_window_fused, fused_tick,
-                  plan_tiling, use_interpret)
+from .ops import (PackedTables, engine_tick_fused, engine_window_fused,
+                  fused_tick, pack_route_tables, plan_tiling, use_interpret)
 from .ref import fused_outputs_ref, tick_ref, window_ref
 
 __all__ = [
     "SEGSUM_MODES", "TickOut", "hot_tick", "netsim_tick",
     "engine_tick_fused", "engine_window_fused", "fused_tick",
-    "plan_tiling", "use_interpret",
+    "PackedTables", "pack_route_tables", "plan_tiling", "use_interpret",
     "fused_outputs_ref", "tick_ref", "window_ref",
 ]

@@ -53,12 +53,23 @@ masked inactive.  Under ``jax.vmap`` (the grid executor's lane batching)
 the whole thing stays ONE ``pallas_call`` with a leading lane axis
 prepended to the grid: ``[lanes, 4, FW_blocks]``.
 
+Gather-free tiling: the tiled kernel takes no index-table operands at
+all.  Every former gather — ``routes[inst_flow]``, the per-step ECMP
+candidate lookup, ``chunk_sched[inst_job]``, ``done_upto[inst_flow]`` —
+is replaced by *packed per-instance tables* (`params.pack_route_tables`)
+streamed block-by-block through the same BlockSpec pipeline as the
+instance state, plus iota-select-and-sum reads (`_onehot_take` /
+`_onehot_col`: exactly one selected entry per output, so the masked sum
+is value-exact) for the in-kernel dynamic lookups (ECMP candidate
+choice, per-link scales, Symphony rows).  Per-block valid-row counts
+ride in scalar prefetch (``PrefetchScalarGridSpec``), so block shapes
+stay static and the next block's table DMA overlaps compute.  The
+resulting TPU-platform StableHLO contains **zero** ``stablehlo.gather``
+and **zero** ``stablehlo.scatter`` ops — the full Mosaic-lowerable
+shape, CI-gated.
+
 Compiled (non-interpret) execution is untested on this repo's CPU-only
-CI — `ops.use_interpret` defaults to interpret mode on CPU hosts.  The
-remaining obstacle to a real Mosaic compile is the route/table gathers
-(Mosaic has no vector-gather lowering yet); the scatters — which have no
-lowering path at all — are fully eliminated in the tiled onehot variant
-(CI greps the StableHLO to keep it that way).
+CI — `ops.use_interpret` defaults to interpret mode on CPU hosts.
 """
 from __future__ import annotations
 
@@ -143,6 +154,37 @@ def _zero_null_link(q, L, mode):
         jax.lax.broadcasted_iota(jnp.int32, q.shape, 0) == L, 0.0, q)
 
 
+# ----------------------------------------------- gather-free table reads
+def _onehot_take(table, idx):
+    """Gather-free ``table[idx]`` for a 1-D table: iota-select-and-sum
+    over the table axis.  Exactly one entry is selected per output, so
+    the masked sum is value-exact (``x + 0 == x``) — bitwise-equal to
+    the gather for ints and for the non-negative floats used here."""
+    flat = idx.reshape(-1)
+    oh = _rows(table.shape[0], flat.shape[0]) == flat[None, :]
+    out = jnp.where(oh, table[:, None], 0).sum(axis=0)
+    return out.reshape(idx.shape)
+
+
+def _onehot_col(table, idx):
+    """Gather-free row-wise column select: ``table[arange(N), idx]`` for
+    a ``[N, C]`` table and ``[N]`` indices.  Same exactness contract as
+    :func:`_onehot_take`."""
+    oh = (jax.lax.broadcasted_iota(jnp.int32, table.shape, 1)
+          == idx[:, None])
+    return jnp.where(oh, table, 0).sum(axis=1)
+
+
+def _onehot_plane(table, idx):
+    """Gather-free ``table[arange(N), idx, :]`` for a ``[N, P, H]``
+    candidate slab and ``[N]`` choices: iota-select over the middle
+    axis, exactly one plane selected per row (value-exact)."""
+    N, P = table.shape[0], table.shape[1]
+    oh = (jax.lax.broadcasted_iota(jnp.int32, (N, P), 1)
+          == idx[:, None])[:, :, None]
+    return jnp.where(oh, table, 0).sum(axis=1)
+
+
 # ------------------------------------------------ value-level hot stages
 def hot_tick(istep, isent, irate, done_upto, q_prev,
              s_stepmin, s_psnwin, s_alpha, s_cnt, s_cntop,
@@ -150,20 +192,33 @@ def hot_tick(istep, isent, irate, done_upto, q_prev,
              inst_job, inst_flow, sps, phase, nph, off, chunk_sched,
              tick, seed, bg_period, sym_win, pq_on,
              bg_duty, red_kmin, red_kmax, red_pmax, tau, n_sample, alpha_max,
-             *, H, SEG, dt, mtu, per_step_ecmp, policy, segsum) -> TickOut:
+             *, H, SEG, dt, mtu, per_step_ecmp, policy, segsum,
+             tables=None) -> TickOut:
     """The fused hot stages on plain values (the monolithic kernel body,
     also replayed per tick by the multi-tick window kernel).  Op order
-    replays the stage functions exactly — bitwise in scatter mode."""
+    replays the stage functions exactly — bitwise in scatter mode.
+
+    With ``tables`` (a `params.PackedTables`) the per-flow/per-job table
+    gathers become per-instance row reads and iota-selects; every
+    replaced read is an int or exactly-one-nonzero select, so the
+    bitwise contract is unchanged.  The multi-tick window kernel passes
+    tables so they stay VMEM-resident across its ``fori_loop``.
+    """
     J = chunk_sched.shape[0]
     DJ = s_stepmin.shape[0]
     L = cap.shape[0] - 1
 
     # ---- instance view (stages.instance_view, on-chip)
     iseg = (istep // sps) * nph + phase
-    ichunk = chunk_sched[inst_job, jnp.clip(iseg, 0, SEG - 1)]
+    if tables is None:
+        ichunk = chunk_sched[inst_job, jnp.clip(iseg, 0, SEG - 1)]
+        done_i = done_upto[inst_flow]
+    else:
+        ichunk = _onehot_col(tables.chunk, jnp.clip(iseg, 0, SEG - 1))
+        done_i = jnp.repeat(done_upto, istep.shape[0] // done_upto.shape[0])
     iwire = iseg * WIRE_SEG + istep % sps + off
     occupied = istep >= 0
-    retired = occupied & (istep < done_upto[inst_flow])
+    retired = occupied & (istep < done_i)
     complete = occupied & (isent >= ichunk)
     active = occupied & ~complete & ~retired
     ipsn = isent / mtu
@@ -175,11 +230,23 @@ def hot_tick(istep, isent, irate, done_upto, q_prev,
              + (seed.astype(jnp.uint32) + 1) * jnp.uint32(2246822519))
         h = (h ^ (h >> 13)) * jnp.uint32(2654435761)
         h = h ^ (h >> 16)
-        n_p = n_paths[inst_flow].astype(jnp.uint32)
+        if tables is None:
+            n_p = n_paths[inst_flow].astype(jnp.uint32)
+        else:
+            n_p = tables.n_paths.astype(jnp.uint32)
         choice = (h % n_p).astype(jnp.int32)
-        iroute = path_table[inst_flow, choice]
-    else:
+        if tables is None:
+            iroute = path_table[inst_flow, choice]
+            idom = link_dom[iroute]
+        else:
+            iroute = _onehot_plane(tables.cand, choice)
+            idom = _onehot_plane(tables.cand_dom, choice)
+    elif tables is None:
         iroute = routes[inst_flow]
+        idom = link_dom[iroute]
+    else:
+        iroute = tables.routes
+        idom = tables.route_dom
     flat_links = iroute.reshape(-1)
 
     def lsum(vals):
@@ -225,7 +292,6 @@ def hot_tick(istep, isent, irate, done_upto, q_prev,
                      0.0, 1.0) * red_pmax
 
     # ---- Symphony per-(domain, job) scatter (stages.stage_symphony)
-    idom = link_dom[iroute]
     dj = idom * J + inst_job[:, None]
     djf = dj.reshape(-1)
     sm = s_stepmin[dj]
@@ -305,24 +371,37 @@ def _tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
 
 
 # ----------------------------------------------------- tiled kernel body
-def _tiled_tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
-                       smin_ref, spsn_ref, salpha_ref, scnt_ref, scntop_ref,
-                       routes_ref, table_ref, npaths_ref, cap_ref, dom_ref,
-                       bgb_ref, bga_ref,
-                       job_ref, flow_ref, sps_ref, phase_ref, nph_ref,
-                       off_ref, chunk_ref, iscal_ref, fscal_ref,
-                       iroute_o, eff_o, offered_o, q_o, pred_o,
-                       smin_o, spsn_o, salpha_o, scnt_o, scntop_o,
-                       jobmin_s, offp_s, offhi_s, offlo_s,
-                       sl_s, shi_s, slo_s,
-                       cnt_s, cntop_s, cand_s, minact_s, stepmin_s, psnwin_s,
-                       *, H, SEG, FW, blk, dt, mtu, per_step_ecmp, policy):
+def _tiled_tick_kernel(*refs, H, SEG, blk, dt, mtu, per_step_ecmp, policy):
     """One tick, tiled over the instance axis: grid = (sweep, block).
 
-    Per-instance refs hold one ``blk``-row block (BlockSpec-sliced);
-    link/Symphony/static refs hold whole arrays.  The scratch refs
+    Gather-free: per-instance refs — including the packed route/chunk/
+    ECMP tables — hold one ``blk``-row block (BlockSpec-sliced); link/
+    Symphony refs hold whole arrays; there are no index-table operands
+    left to gather from.  ``refs[0]`` is the scalar-prefetch ref with
+    the per-block valid-row counts (the only trace-time metadata the
+    blocks need — keeping it lane-invariant is what lets ``vmap`` batch
+    the lane axis into this one ``pallas_call``).  The scratch refs
     persist across grid steps and carry the cross-block partials.
     """
+    nroute = 3 if per_step_ecmp else 2
+    n_in = 20 + nroute + 2
+    nvalid_ref = refs[0]
+    ins = refs[1:1 + n_in]
+    outs = refs[1 + n_in:1 + n_in + 10]
+    (jobmin_s, offp_s, offhi_s, offlo_s, sl_s, shi_s, slo_s,
+     cnt_s, cntop_s, cand_s, minact_s, stepmin_s, psnwin_s) = \
+        refs[1 + n_in + 10:]
+
+    (step_ref, sent_ref, rate_ref, done_ref,
+     q_ref, smin_ref, spsn_ref, salpha_ref, scnt_ref, scntop_ref,
+     cap_ref, bgb_ref, bga_ref,
+     job_ref, flow_ref, sps_ref, phase_ref, nph_ref, off_ref,
+     chunk_ref) = ins[:20]
+    route_refs = ins[20:20 + nroute]
+    iscal_ref, fscal_ref = ins[20 + nroute:]
+    (iroute_o, eff_o, offered_o, q_o, pred_o,
+     smin_o, spsn_o, salpha_o, scnt_o, scntop_o) = outs
+
     s = pl.program_id(0)
     b = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -337,39 +416,41 @@ def _tiled_tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
     nph = nph_ref[...]
     off = off_ref[...]
     cap = cap_ref[...]
-    link_dom = dom_ref[...]
-    chunk_sched = chunk_ref[...]
     tick, seed = iscal_ref[0], iscal_ref[1]
     bg_period, sym_win, pq_on = iscal_ref[2], iscal_ref[3], iscal_ref[4]
     bg_duty = fscal_ref[0]
     red_kmin, red_kmax, red_pmax = fscal_ref[1], fscal_ref[2], fscal_ref[3]
     tau, n_sample, alpha_max = fscal_ref[4], fscal_ref[5], fscal_ref[6]
-    J = chunk_sched.shape[0]
+    J = jobmin_s.shape[0]
     DJ = smin_ref.shape[0]
     L = cap.shape[0] - 1
 
     # ---- per-block instance view; edge-padded rows are masked inactive
-    valid = b * blk + jax.lax.broadcasted_iota(jnp.int32, (blk,), 0) < FW
+    valid = jax.lax.broadcasted_iota(jnp.int32, (blk,), 0) < nvalid_ref[b]
     iseg = (istep // sps) * nph + phase
-    ichunk = chunk_sched[inst_job, jnp.clip(iseg, 0, SEG - 1)]
+    ichunk = _onehot_col(chunk_ref[...], jnp.clip(iseg, 0, SEG - 1))
     iwire = iseg * WIRE_SEG + istep % sps + off
     occupied = istep >= 0
-    retired = occupied & (istep < done_ref[...][inst_flow])
+    retired = occupied & (istep < done_ref[...])
     complete = occupied & (isent >= ichunk)
     active = occupied & ~complete & ~retired & valid
     ipsn = isent / mtu
 
     if per_step_ecmp:
+        cand_ref, cdom_ref, npaths_ref = route_refs
         h = (inst_flow.astype(jnp.uint32) * jnp.uint32(2654435761)
              + jnp.maximum(istep, 0).astype(jnp.uint32) * jnp.uint32(40503)
              + (seed.astype(jnp.uint32) + 1) * jnp.uint32(2246822519))
         h = (h ^ (h >> 13)) * jnp.uint32(2654435761)
         h = h ^ (h >> 16)
-        n_p = npaths_ref[...][inst_flow].astype(jnp.uint32)
+        n_p = npaths_ref[...].astype(jnp.uint32)
         choice = (h % n_p).astype(jnp.int32)
-        iroute = table_ref[...][inst_flow, choice]
+        iroute = _onehot_plane(cand_ref[...], choice)
+        idom = _onehot_plane(cdom_ref[...], choice)
     else:
-        iroute = routes_ref[...][inst_flow]
+        routes_ref, rdom_ref = route_refs
+        iroute = routes_ref[...]
+        idom = rdom_ref[...]
     flat_links = iroute.reshape(-1)
     w_rate = jnp.where(active, irate, 0.0)
 
@@ -402,7 +483,7 @@ def _tiled_tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
     # ---- sweep 1: hi/lo-class offered partials (min-wire now complete)
     @pl.when(s == 1)
     def _sweep1():
-        is_hi = active & (iwire <= jobmin_s[...][inst_job])
+        is_hi = active & (iwire <= _onehot_take(jobmin_s[...], inst_job))
         offhi_s[...] = block_lsum(offhi_s[...], jnp.where(is_hi, irate, 0.0))
         offlo_s[...] = block_lsum(offlo_s[...],
                                   jnp.where(active & ~is_hi, irate, 0.0))
@@ -419,17 +500,17 @@ def _tiled_tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
         slo_s[...] = rem / jnp.maximum(offlo_s[...], 1.0)
 
     def eff_block():
-        is_hi = active & (iwire <= jobmin_s[...][inst_job])
-        eff_p = w_rate * sl_s[...][iroute].min(axis=1)
-        share = jnp.where(is_hi[:, None], shi_s[...][iroute],
-                          jnp.minimum(1.0, slo_s[...][iroute]))
+        is_hi = active & (iwire <= _onehot_take(jobmin_s[...], inst_job))
+        eff_p = w_rate * _onehot_take(sl_s[...], iroute).min(axis=1)
+        share = jnp.where(is_hi[:, None], _onehot_take(shi_s[...], iroute),
+                          jnp.minimum(1.0, _onehot_take(slo_s[...], iroute)))
         eff_q = w_rate * share.min(axis=1)
         if policy == "pq":
             return eff_q
         return jnp.where(pq_on != 0, eff_q, eff_p)
 
     def dj_block():
-        dj = link_dom[iroute] * J + inst_job[:, None]
+        dj = idom * J + inst_job[:, None]
         return dj, dj.reshape(-1)
 
     # ---- sweep 2, per block: eff + Symphony cnt/cntop/step-min partials
@@ -437,7 +518,7 @@ def _tiled_tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
     def _sweep2():
         eff = eff_block()
         dj, djf = dj_block()
-        sm4 = smin_ref[...][dj].reshape(-1)
+        sm4 = _onehot_take(smin_ref[...], dj).reshape(-1)
         pkts = eff * dt / mtu
         newly_done = active & (isent + eff * dt >= ichunk)
         act4 = per_hop(active, H)
@@ -478,7 +559,8 @@ def _tiled_tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
         # the untiled segmax against the state directly
         psnwin_s[...] = _segmax(psnwin_s[...], djf,
                                 jnp.where(send4 & ~done4 &
-                                          (wire4 == stepmin_s[...][djf]),
+                                          (wire4 ==
+                                           _onehot_take(stepmin_s[...], djf)),
                                           psn4, 0.0), "onehot")
         iroute_o[...] = iroute
         eff_o[...] = eff
@@ -515,7 +597,11 @@ def _tiled_tick_kernel(step_ref, sent_ref, rate_ref, done_ref, q_ref,
 
 
 def _edge_pad(x, n):
-    return jnp.pad(x, (0, n), mode="edge") if n else x
+    """Pad the leading (instance) axis with ``n`` edge rows; lowers to
+    slice + concatenate — no gather."""
+    if not n:
+        return x
+    return jnp.pad(x, [(0, n)] + [(0, 0)] * (x.ndim - 1), mode="edge")
 
 
 # --------------------------------------------------------- entry point
@@ -526,7 +612,7 @@ def netsim_tick(step_of, sent, rate, done_upto, q_prev,
                 chunk_sched, iscal, fscal, *,
                 dt: float, mtu: float, per_step_ecmp: bool,
                 policy: str = "proportional", segsum: str = "scatter",
-                blk: int | None = None,
+                blk: int | None = None, tables=None,
                 interpret: bool = True) -> TickOut:
     """One fused tick of the netsim hot path.
 
@@ -540,7 +626,12 @@ def netsim_tick(step_of, sent, rate, done_upto, q_prev,
     ``blk`` < FW selects the tiled grid kernel (``segsum="onehot"``
     only): per-instance operands are BlockSpec-tiled into ``blk``-row
     blocks and the grid runs ``(TILED_SWEEPS, ceil(FW/blk))`` steps with
-    cross-block reduction partials in persistent scratch.
+    cross-block reduction partials in persistent scratch.  The tiled
+    kernel is gather-free and requires ``tables`` (a
+    `params.PackedTables`, normally ``ctx.tables`` from
+    `stages.make_ctx`): the packed per-instance route/chunk/ECMP tables
+    are streamed block-by-block in place of the index-table operands,
+    and the per-block valid-row counts ride in scalar prefetch.
     """
     if policy not in ("proportional", "pq"):
         raise ValueError(f"kernel share policy must be proportional|pq, "
@@ -586,47 +677,69 @@ def netsim_tick(step_of, sent, rate, done_upto, q_prev,
         return TickOut(*outs)
 
     # ---------- tiled dispatch: grid over (sweep, instance block)
+    if tables is None:
+        raise ValueError(
+            f"blk={blk} tiling requires packed route tables "
+            "(params.PackedTables; use ctx.tables from stages.make_ctx): "
+            "the gather-free tiled kernel streams per-instance tables "
+            "instead of gathering from index-table operands")
     blk = int(blk)
     NB = -(-FW // blk)
     pad = NB * blk - FW
     J = int(chunk_sched.shape[0])
 
-    def pad_i(x):                      # [FW] -> [NB*blk]
+    def pad_i(x):                      # [FW, ...] -> [NB*blk, ...]
         return _edge_pad(x, pad)
 
-    operands = (pad_i(step_of), pad_i(sent), pad_i(rate), done_upto, q_prev,
-                s_stepmin, s_psnwin, s_alpha, s_cnt, s_cntop,
-                routes, path_table, n_paths, cap, link_dom, bg_base, bg_amp,
+    # done_upto expands [F] -> [FW] at trace time (repeat = broadcast +
+    # reshape, gather-free) so it streams with the instance blocks.
+    done_i = jnp.repeat(done_upto, FW // int(done_upto.shape[0]))
+    operands = [pad_i(step_of), pad_i(sent), pad_i(rate), pad_i(done_i),
+                q_prev, s_stepmin, s_psnwin, s_alpha, s_cnt, s_cntop,
+                cap, bg_base, bg_amp,
                 pad_i(inst_job), pad_i(inst_flow), pad_i(sps_i),
                 pad_i(phase_i), pad_i(nph_i), pad_i(off_i),
-                chunk_sched, iscal, fscal)
+                pad_i(tables.chunk)]
+    if per_step_ecmp:
+        operands += [pad_i(tables.cand), pad_i(tables.cand_dom),
+                     pad_i(tables.n_paths)]
+    else:
+        operands += [pad_i(tables.routes), pad_i(tables.route_dom)]
+    nroute = 3 if per_step_ecmp else 2
+    operands += [iscal, fscal]
+
+    # Per-block valid-row counts, built from Python ints: lane-INVARIANT,
+    # which is what keeps vmap's pallas batching rule on the
+    # grid-prepend path (batched scalar-prefetch operands would fall
+    # back to a scan over lanes).
+    nvalid = jnp.asarray([min(blk, FW - i * blk) for i in range(NB)],
+                         jnp.int32)
 
     def blk_spec(a):                   # blocked per-instance operand
         return pl.BlockSpec((blk,) + a.shape[1:],
-                            lambda s, b: (b,) + (0,) * (a.ndim - 1))
+                            lambda s, b, nv: (b,) + (0,) * (a.ndim - 1))
 
     def full_spec(a):                  # whole-array operand
-        return pl.BlockSpec(a.shape, lambda s, b, nd=a.ndim: (0,) * nd)
+        return pl.BlockSpec(a.shape, lambda s, b, nv, nd=a.ndim: (0,) * nd)
 
-    blocked = {0, 1, 2, 17, 18, 19, 20, 21, 22}   # per-instance operands
+    blocked = set(range(4)) | set(range(13, 20 + nroute))
     in_specs = [blk_spec(a) if i in blocked else full_spec(a)
                 for i, a in enumerate(operands)]
     out_shape_t = list(out_shape)
     out_shape_t[0] = jax.ShapeDtypeStruct((NB * blk, H), jnp.int32)
     out_shape_t[1] = jax.ShapeDtypeStruct((NB * blk,), jnp.float32)
     out_specs = [
-        pl.BlockSpec((blk, H), lambda s, b: (b, 0)),    # iroute
-        pl.BlockSpec((blk,), lambda s, b: (b,)),        # eff
+        pl.BlockSpec((blk, H), lambda s, b, nv: (b, 0)),    # iroute
+        pl.BlockSpec((blk,), lambda s, b, nv: (b,)),        # eff
     ] + [full_spec(sh) for sh in out_shape_t[2:]]
     kernel = functools.partial(
-        _tiled_tick_kernel, H=H, SEG=int(chunk_sched.shape[-1]), FW=FW,
+        _tiled_tick_kernel, H=H, SEG=int(chunk_sched.shape[-1]),
         blk=blk, dt=float(dt), mtu=float(mtu),
         per_step_ecmp=bool(per_step_ecmp), policy=policy)
-    outs = pl.pallas_call(
-        kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(TILED_SWEEPS, NB),
         in_specs=in_specs,
-        out_shape=out_shape_t,
         out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((J,), jnp.int32),        # jobmin
@@ -643,8 +756,13 @@ def netsim_tick(step_of, sent, rate, done_upto, q_prev,
             pltpu.VMEM((DJ,), jnp.int32),       # finalized step-min
             pltpu.VMEM((DJ,), jnp.float32),     # psn-window partials
         ],
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape_t,
         interpret=interpret,
-    )(*operands)
+    )(nvalid, *operands)
     outs = list(outs)
     outs[0] = outs[0][:FW]
     outs[1] = outs[1][:FW]

@@ -20,11 +20,17 @@ import os
 import jax
 import jax.numpy as jnp
 
+from ...core.netsim.params import (PackedTables, pack_route_tables,
+                                   plan_tiling)
 from ...core.netsim.stages import (EngineState, instance_view, stage_marking,
                                    stage_metrics, stage_progress,
                                    stage_rate_control, stage_segments,
                                    stage_starts, static_pq_on)
 from .kernel import TickOut, netsim_tick
+
+__all__ = ["use_interpret", "kernel_policy", "plan_tiling", "PackedTables",
+           "pack_route_tables", "fused_tick", "compose_tick",
+           "engine_tick_fused", "engine_window_fused"]
 
 
 def use_interpret() -> bool:
@@ -40,36 +46,6 @@ def kernel_policy(cfg) -> str:
     if cfg.share_policy == "pq" or static_pq_on(cfg):
         return "pq"
     return "proportional"
-
-
-def plan_tiling(FW: int, blk: int | None, segsum: str,
-                tick_window: int) -> int | None:
-    """Validate and normalize the kernel tiling plan for an ``[FW]``
-    instance axis: returns the effective ``blk`` (``None`` = untiled).
-
-    * ``blk`` tiling requires the dense ``segsum="onehot"`` reductions —
-      the scatter variant cannot accumulate per-block partials without
-      the vector scatters the tiling exists to eliminate.
-    * ``blk >= FW`` normalizes to untiled (one whole-array block).
-    * ``tick_window > 1`` keeps the whole ``[FW]`` axis resident across
-      ticks, so it is mutually exclusive with ``blk < FW`` tiling.
-    """
-    if blk is None:
-        return None
-    if blk < 1:
-        raise ValueError(f"blk must be >= 1, got {blk}")
-    if int(blk) >= FW:
-        return None
-    if segsum != "onehot":
-        raise ValueError(
-            f"blk={blk} tiling requires segsum='onehot'; "
-            f"got segsum={segsum!r}")
-    if tick_window > 1:
-        raise ValueError(
-            f"blk={blk} < FW={FW} tiling cannot combine with "
-            f"tick_window={tick_window} > 1: the multi-tick window keeps "
-            "the whole instance axis resident across ticks")
-    return int(blk)
 
 
 def fused_tick(ctx, cfg, starts, state, tick, *,
@@ -104,6 +80,7 @@ def fused_tick(ctx, cfg, starts, state, tick, *,
         ctx.off_i, ctx.wl.chunk_sched, iscal, fscal,
         dt=cfg.dt, mtu=cfg.mtu, per_step_ecmp=cfg.per_step_ecmp,
         policy=kernel_policy(cfg), segsum=segsum, blk=blk,
+        tables=getattr(ctx, "tables", None),
         interpret=use_interpret() if interpret is None else interpret)
 
 

@@ -23,11 +23,21 @@ window's **last** tick, matching the simulator's record-period contract
 (`simulator._core_impl` samples the last tick of each record period, so
 windows are aligned to divide the period).
 
-Scope: the window kernel keeps the whole ``[FW]`` instance axis resident
-(it is mutually exclusive with ``blk`` tiling — see ``ops.plan_tiling``)
-and is exercised in interpret mode on CPU; the cold stages it replays
-contain gathers/scatters that Mosaic cannot lower today, so the
-Mosaic-readiness CI gate covers the tiled single-tick kernel only.
+Scope: the window kernel keeps the whole ``[FW]`` instance axis — and
+the packed per-instance route/chunk/ECMP tables (`params.PackedTables`)
+— VMEM-resident across the in-kernel ``fori_loop``, so table reads cost
+their one initial DMA per *window*, not per tick.  With ``blk`` set the
+tiling normalizes away here (``params.plan_tiling`` returns ``None``
+for ``tick_window > 1``): windowing already amortizes the state traffic
+the tiling would stream.  The kernel is exercised in interpret mode on
+CPU; the cold stages it replays contain gathers/scatters that Mosaic
+cannot lower today, so the Mosaic-readiness CI gate covers the tiled
+single-tick kernel only.
+
+The carried engine state is donated: the pallas call aliases each of
+the ``N_STATE`` state inputs to its same-shaped state output
+(``input_output_aliases``), so a record period of windows updates the
+state buffers in place instead of copying them once per window.
 """
 from __future__ import annotations
 
@@ -37,14 +47,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ...core.netsim.params import (RuntimeKnobs, SimStructure, SymphonyParams,
-                                   merge_params)
+from ...core.netsim.params import (PackedTables, RuntimeKnobs, SimStructure,
+                                   SymphonyParams, merge_params,
+                                   pack_route_tables)
 from ...core.netsim.stages import EngineState, WLArrays, make_ctx, stage_starts
 from .kernel import hot_tick
 
 N_STATE = len(EngineState._fields)   # 20
 N_WL = len(WLArrays._fields)         # 15
 N_STATIC = 12                        # simulator.Static fields
+N_TABLES = len(PackedTables._fields)  # 6 packed route-table operands
 # Static fields that are scalars (marshalled as shape-(1,) operands):
 _STATIC_SCALARS = (8, 9, 11)         # bg_period_ticks, bg_duty, seed
 
@@ -54,17 +66,20 @@ def _window_kernel(*refs, struct: SimStructure, n: int, policy: str,
     from ...core.netsim.simulator import Static
     from .ops import compose_tick
 
-    ins = refs[:N_STATE + N_WL + N_STATIC + 2]
-    outs = refs[N_STATE + N_WL + N_STATIC + 2:]
+    base = N_STATE + N_WL + N_STATIC
+    ins = refs[:base + N_TABLES + 2]
+    outs = refs[base + N_TABLES + 2:]
 
     state = EngineState(*(r[...] for r in ins[:N_STATE]))
     wl = WLArrays(*(r[...] for r in ins[N_STATE:N_STATE + N_WL]))
-    sa = [r[...] for r in ins[N_STATE + N_WL:N_STATE + N_WL + N_STATIC]]
+    sa = [r[...] for r in ins[N_STATE + N_WL:base]]
     for i in _STATIC_SCALARS:        # back to true scalars for broadcasting
         sa[i] = sa[i][0]
     st = Static(*sa)
-    ki = ins[N_STATE + N_WL + N_STATIC]
-    kf = ins[N_STATE + N_WL + N_STATIC + 1]
+    # packed route tables: read once, VMEM-resident across the fori_loop
+    tables = PackedTables(*(r[...] for r in ins[base:base + N_TABLES]))
+    ki = ins[base + N_TABLES]
+    kf = ins[base + N_TABLES + 1]
 
     base_tick = ki[0]
     knobs = RuntimeKnobs(
@@ -76,7 +91,7 @@ def _window_kernel(*refs, struct: SimStructure, n: int, policy: str,
                            n_sample=kf[10], alpha_max=kf[11]),
         sym_win_ticks=ki[4], sym_start_tick=ki[5], pq_on=ki[6])
     cfg = merge_params(struct, knobs)
-    ctx = make_ctx(st, wl, struct.window)
+    ctx = make_ctx(st, wl, struct.window, tables=tables)
     SEG = int(wl.chunk_sched.shape[1])
     J = ctx.J
     f32 = lambda v: jnp.asarray(v, jnp.float32)
@@ -99,7 +114,8 @@ def _window_kernel(*refs, struct: SimStructure, n: int, policy: str,
             f32(cfg.red_pmax), f32(cfg.sym.tau), f32(cfg.sym.n_sample),
             f32(cfg.sym.alpha_max),
             H=ctx.H, SEG=SEG, dt=cfg.dt, mtu=cfg.mtu,
-            per_step_ecmp=cfg.per_step_ecmp, policy=policy, segsum=segsum)
+            per_step_ecmp=cfg.per_step_ecmp, policy=policy, segsum=segsum,
+            tables=ctx.tables)
         return compose_tick(ctx, cfg, state, tick, starts, out)
 
     zero_sample = (jnp.zeros(J, jnp.int32), jnp.zeros(J, jnp.int32),
@@ -151,7 +167,9 @@ def netsim_window(ctx, cfg, state: EngineState, base_tick, n: int, *,
     sa = list(st)
     for i in _STATIC_SCALARS:
         sa[i] = sa[i].reshape(1)
-    operands = list(state) + list(wl) + sa + [ki, kf]
+    tables = ctx.tables if getattr(ctx, "tables", None) is not None \
+        else pack_route_tables(st, wl, cfg.window)
+    operands = list(state) + list(wl) + sa + list(tables) + [ki, kf]
 
     J = ctx.J
     out_shape = ([jax.ShapeDtypeStruct(x.shape, x.dtype) for x in state]
@@ -163,6 +181,10 @@ def netsim_window(ctx, cfg, state: EngineState, base_tick, n: int, *,
         partial(_window_kernel, struct=struct, n=int(n), policy=policy,
                 segsum=segsum),
         out_shape=out_shape,
+        # state operand i writes state output i (same shape/dtype): donate
+        # the carried buffers so chained windows update state in place
+        # instead of copying all N_STATE arrays once per window.
+        input_output_aliases={i: i for i in range(N_STATE)},
         interpret=interpret,
     )(*operands)
     new_state = EngineState(*outs[:N_STATE])

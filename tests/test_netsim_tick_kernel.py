@@ -260,12 +260,25 @@ def test_tick_window_requires_pallas_backend():
         simulate(topo, wl, cfg, routing="ecmp", seed=0)
 
 
-def test_tick_window_excludes_blk_tiling():
+def test_tick_window_combines_with_blk_tiling():
+    """blk + tick_window combine: plan_tiling routes the config through
+    the window kernel (tiling normalizes to None — windowing already
+    amortizes the state traffic), and the onehot reductions there stay
+    int-exact / float-allclose vs the staged engine."""
     topo, wl = _small()
-    cfg = SimParams(n_ticks=100, window=8, backend="pallas",
-                    segsum="onehot", blk=16, tick_window=5)
-    with pytest.raises(ValueError, match="tick_window"):
-        simulate(topo, wl, cfg, routing="ecmp", seed=0)
+    cfg = SimParams(n_ticks=300, window=8, record_every=20, sym_on=True)
+    x = simulate(topo, wl, cfg, routing="ecmp", seed=3)
+    c = simulate(topo, wl,
+                 cfg._replace(backend="pallas", segsum="onehot", blk=16,
+                              tick_window=5),
+                 routing="ecmp", seed=3)
+    for f in x._fields:
+        a, b = np.asarray(getattr(x, f)), np.asarray(getattr(c, f))
+        if a.dtype.kind in "iub":
+            assert np.array_equal(a, b), f"blk+tick_window: {f}"
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"blk+tick_window: {f}")
 
 
 def test_wfq_fallback_warns_once():
@@ -341,10 +354,12 @@ def test_window_kernel_single_dispatch_under_grid():
 
 
 # --------------------------------------------- Mosaic-readiness (static)
-def test_tiled_onehot_stablehlo_scatter_free():
+def test_tiled_onehot_stablehlo_scatter_free_and_gather_free():
     """CI Mosaic gate: the tiled onehot kernel's lowering contains NO
-    scatter ops — the dense segment reductions plus the iota-select
-    null-link zeroing removed every vector scatter from the hot path —
+    scatter ops AND NO gather ops — the dense segment reductions plus
+    the iota-select null-link zeroing removed every vector scatter, and
+    the packed per-block route/chunk/ECMP tables (streamed via BlockSpec
+    with scalar-prefetched per-block valid counts) removed every gather —
     and the full 8-lane grid dispatch is a single pallas_call."""
     topo, wl = _small()
     cfg = SimParams(n_ticks=40, window=8, sym_on=True)
@@ -364,16 +379,20 @@ def test_tiled_onehot_stablehlo_scatter_free():
         lowering_platforms=("tpu",)).as_text()
     n_scatter = txt.count("stablehlo.scatter")
     assert n_scatter == 0, f"{n_scatter} scatter ops in tiled onehot HLO"
+    n_gather = txt.count("stablehlo.gather") + txt.count("dynamic_gather")
+    assert n_gather == 0, f"{n_gather} gather ops in tiled onehot HLO"
 
 
 def test_golden_table1_tick_window_and_tiled():
-    """Acceptance: the multi-tick window kernel (scatter, bit-for-bit)
-    and the tiled onehot grid kernel (allclose floats; finish ticks are
-    ints) both land the seed golden finish ticks on Table 1."""
+    """Acceptance: the multi-tick window kernel (scatter, bit-for-bit),
+    the tiled onehot grid kernel (allclose floats; finish ticks are
+    ints), and the combined blk x tick_window config all land the seed
+    golden finish ticks on Table 1."""
     topo, wl = _table1()
     cfg = SimParams(n_ticks=20_000, window=64, backend="pallas")
     for c in (cfg._replace(tick_window=5),
-              cfg._replace(segsum="onehot", blk=256)):
+              cfg._replace(segsum="onehot", blk=256),
+              cfg._replace(segsum="onehot", blk=256, tick_window=5)):
         base = simulate(topo, wl, c, routing="ecmp", seed=3)
         assert int(base.job_finish_ticks[0]) == GOLDEN_JOB["ecmp_base"]
         sym = simulate(topo, wl, c._replace(sym_on=True), routing="ecmp",
