@@ -421,6 +421,50 @@ def _fat_tree_multipod(n_hosts: int = 128, ring: int = 32,
     return Built(topo, wl, cfg)
 
 
+@scenario("tenant_churn",
+          "Continuous multi-tenant replay over the multipod fabric: "
+          "Poisson tenant arrivals/departures plus a dependency-triggered "
+          "follow-on job (the online control plane's serving workload)",
+          sweeps=(
+              SweepAxis("sym", (False, True)),
+              SweepAxis("tau", (0.1, 0.25, 0.5), quick=(0.25,)),
+          ))
+def _tenant_churn(n_hosts: int = 64, ring: int = 8, chunk: float = 2e6,
+                  passes: int = 2, rate_hz: float = 150.0,
+                  churn_horizon_s: float = 0.04, max_tenants: int = 4,
+                  trigger_delay: float = 2e-3, churn_seed: int = 0,
+                  horizon_mult: float = 6.0, sym: bool = False,
+                  deploy: str = "tor",
+                  core_oversubscription: float = 2.0) -> Built:
+    """Job 0 is a long-lived tenant; job 1 is dependency-triggered (starts
+    when job 0 completes its first collective, cf. CCL_Simulator's policy
+    rules); the remaining ring-sized host groups serve a Poisson stream of
+    short-lived tenants.  All arrivals are lowered to traced arrays, so
+    churn grids still run under the one-compile grid/shard executors."""
+    topo = multipod_topo(n_hosts,
+                         core_oversubscription=core_oversubscription)
+    groups = [list(range(g * ring, (g + 1) * ring))
+              for g in range(n_hosts // ring)]
+    if len(groups) < 3:
+        raise ValueError("tenant_churn needs >= 3 ring-sized host groups")
+    b = WorkloadBuilder()
+    base = b.add_ring_job(hosts=groups[0], ring_size=ring, chunk_bytes=chunk,
+                          passes=passes, barrier=False)
+    follow = b.add_ring_job(hosts=groups[1], ring_size=ring,
+                            chunk_bytes=chunk, passes=passes, barrier=False)
+    b.set_trigger(follow, after_job=base, collectives=1,
+                  delay=trigger_delay)
+    b.add_poisson_churn(groups[2:], rate_hz=rate_hz,
+                        horizon_s=churn_horizon_s, ring_size=ring,
+                        chunk_bytes=chunk / 4, passes=1, seed=churn_seed,
+                        max_jobs=max(1, max_tenants // 2 if QUICK
+                                     else max_tenants))
+    wl = b.build()
+    cfg = _horizon_cfg(wl, horizon_mult, dt=20e-6, sym_on=sym,
+                       deploy=deploy, sym_win_ticks=5, cc_epoch_ticks=2)
+    return Built(topo, wl, cfg)
+
+
 @scenario("hierarchical_tor",
           "Hierarchical allreduce: intra-ToR rings + inter-ToR leader ring")
 def _hierarchical_tor(n_hosts: int = 32, n_tors: int = 4, n_spines: int = 4,

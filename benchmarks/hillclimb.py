@@ -199,6 +199,78 @@ def measure_netsim_grid(axes: dict, seeds=4, devices="env"):
     }
 
 
+def measure_netsim_online(window_recs: int = 8, max_windows: int = 600,
+                          seed: int = 0):
+    """Online tuner over the ``step()`` control plane: retune tau/k every
+    window against the live per-window observations (alternating-coordinate
+    hillclimb on aggregate delivered throughput), next to the offline grid
+    cell.  The windowed engine compiles ONCE; every retune is a free knob
+    update (``engine_compiles`` must be 1 across ALL windows of BOTH the
+    tuned and the fixed-knob rollout)."""
+    import numpy as np
+    from benchmarks.common import build_scenario
+    from repro.core.netsim import SimController, core_trace_count
+    from repro.core.netsim.simulator import I32MAX
+
+    topo, wl, base, routing = build_scenario("table1_ring", passes=2)
+    cfg = base._replace(sym_on=True)
+    window = cfg.record_every * window_recs
+
+    def rollout(policy):
+        ctl = SimController(topo, wl, cfg, window_ticks=window,
+                            routing=routing, seed=seed)
+        action, obs = None, None
+        for i in range(max_windows):
+            _, obs = ctl.step(action)
+            if obs.done:
+                break
+            action = policy(i, obs) if policy else None
+        jf = np.asarray(ctl.state.engine.job_finish)
+        cct = float(jf[0]) * cfg.dt if jf[0] != I32MAX else None
+        return ctl, obs, cct, i + 1
+
+    knobs = {"tau": 0.25, "k": 0.01}
+    bounds = {"tau": (0.02, 0.8), "k": (1e-4, 0.3)}
+    factor = {"tau": 1.5, "k": 2.0}
+    direction = {"tau": -1, "k": 1}
+    prev_obj = -np.inf
+    trace = []
+
+    def tuner(i, obs):
+        nonlocal prev_obj
+        obj = float(np.sum(obs.stats.tput))
+        name = "tau" if i % 2 == 0 else "k"
+        if obj < prev_obj:          # last move hurt: reverse that coordinate
+            direction[name] *= -1
+        prev_obj = obj
+        lo, hi = bounds[name]
+        knobs[name] = float(np.clip(
+            knobs[name] * factor[name] ** direction[name], lo, hi))
+        trace.append({"window": i, "tput_sum": round(obj / 1e9, 3),
+                      "alpha_max": round(obs.stats.alpha_max, 1),
+                      **{k: round(v, 4) for k, v in knobs.items()}})
+        return dict(knobs)
+
+    c0 = core_trace_count()
+    t0 = time.time()
+    _, _, cct_online, w_online = rollout(tuner)
+    _, _, cct_fixed, w_fixed = rollout(None)
+    wall = time.time() - t0
+    compiles = core_trace_count() - c0
+    return {
+        "window_ticks": window,
+        "windows_online": w_online, "windows_fixed": w_fixed,
+        "engine_compiles": compiles,
+        "wall_s": round(wall, 1),
+        "final_knobs": {k: round(v, 4) for k, v in knobs.items()},
+        "cct_online_s": round(cct_online, 4) if cct_online else None,
+        "cct_fixed_s": round(cct_fixed, 4) if cct_fixed else None,
+        "online_vs_fixed": round(cct_fixed / cct_online, 3)
+        if cct_online and cct_fixed else None,
+        "tuner_trace_head": trace[:6],
+    }
+
+
 VARIANTS = {
     ("mamba2", "baseline"): lambda: measure_cell("mamba2_130m", "train_4k"),
     ("mamba2", "ssd_bf16"): lambda: measure_cell(
@@ -218,6 +290,7 @@ VARIANTS = {
         {"t_win_ticks": (5, 10, 20, 40), "k": (3e-3, 1e-2)}),
     ("netsim", "red"): lambda: measure_netsim_grid(
         {"red_pmax": (0.1, 0.2, 0.4), "red_kmin": (25e3, 50e3, 75e3)}),
+    ("netsim", "online"): lambda: measure_netsim_online(),
 }
 
 

@@ -1,8 +1,11 @@
-from . import metrics, params, stages, topology, workload
-from .params import (EngineParams, RuntimeKnobs, SimParams, SimStructure,
-                     grid_from_params, merge_params, stack_knobs)
-from .simulator import (GRID_AXIS, SimResult, Static, build_static,
-                        core_trace_count, link_domains, resolve_grid_mesh,
+from . import control, metrics, params, stages, topology, workload
+from .control import SimController, StepObs, apply_action
+from .params import (EngineParams, RuntimeKnobs, SimParams, SimState,
+                     SimStructure, grid_from_params, merge_params,
+                     stack_knobs)
+from .simulator import (GRID_AXIS, SimResult, Static, WindowSamples,
+                        build_static, core_trace_count, init_state,
+                        link_domains, resolve_grid_mesh, run_window,
                         simulate, simulate_core, simulate_grid,
                         simulate_seeds)
 from .stages import SHARE_POLICIES, EngineCtx, EngineState
@@ -11,14 +14,16 @@ from .topology import (FatTree, LeafSpine, Topology, make_fat_tree,
 from .workload import Workload, WorkloadBuilder
 
 __all__ = [
-    "SimParams", "SimStructure", "RuntimeKnobs", "EngineParams",
+    "SimParams", "SimStructure", "RuntimeKnobs", "EngineParams", "SimState",
     "grid_from_params", "merge_params", "stack_knobs",
     "SimResult", "Static", "simulate", "simulate_core", "simulate_seeds",
     "simulate_grid", "core_trace_count", "build_static", "link_domains",
     "resolve_grid_mesh", "GRID_AXIS",
+    "init_state", "run_window", "WindowSamples",
+    "SimController", "StepObs", "apply_action",
     "SHARE_POLICIES", "EngineCtx", "EngineState",
     "Topology", "LeafSpine", "FatTree", "make_leaf_spine", "make_fat_tree",
     "scale_for_hosts",
-    "Workload", "WorkloadBuilder", "metrics", "params", "stages", "topology",
-    "workload",
+    "Workload", "WorkloadBuilder", "control", "metrics", "params", "stages",
+    "topology", "workload",
 ]

@@ -1,6 +1,8 @@
 """Post-processing of SimResult into the paper's metrics (numpy, host-side)."""
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import numpy as np
 
 from .simulator import I32MAX, WIRE_SEG, SimParams, SimResult
@@ -92,3 +94,37 @@ def max_overlap(res: SimResult, cfg: SimParams, job: int = 0):
     """Maximum step-overlap over the run (supports batched results)."""
     _, ov = overlap_series(res, cfg, job)
     return ov.max(axis=-1)
+
+
+# --------------------------------------------- online control-plane summaries
+class WindowStats(NamedTuple):
+    """Host-side summary of one control window's sampled series — the
+    observation an online tuner reacts to (``control.SimController``)."""
+    alpha_max: float         # max Symphony alpha over the window
+    alpha_last: float        # alpha at the window's final sample
+    qmax: float              # max queue depth (bytes) over the window
+    q_last: float            # queue depth at the final sample
+    tput: np.ndarray         # [J] window-mean delivered bytes/s per job
+    tput_last: np.ndarray    # [J] delivered bytes/s at the final sample
+    done_min: np.ndarray     # [J] min completed local steps (final sample)
+    overlap: np.ndarray      # [J] in-flight wire-step span (final sample)
+
+
+def window_summary(samples) -> WindowStats:
+    """Reduce a :class:`~repro.core.netsim.simulator.WindowSamples` (or any
+    SimResult-shaped series bundle) to one :class:`WindowStats`."""
+    mn = _np(samples.ts_min_wire)[-1].astype(np.int64)
+    mx = _np(samples.ts_max_wire)[-1].astype(np.int64)
+    tput = _np(samples.ts_throughput)
+    q = _np(samples.ts_qmax)
+    al = _np(samples.ts_alpha_max)
+    return WindowStats(
+        alpha_max=float(al.max()),
+        alpha_last=float(al[-1]),
+        qmax=float(q.max()),
+        q_last=float(q[-1]),
+        tput=tput.mean(axis=0),
+        tput_last=tput[-1],
+        done_min=_np(samples.ts_done_min)[-1],
+        overlap=np.where(mx >= 0, mx - mn + 1, 0),
+    )

@@ -33,7 +33,7 @@ lowering).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -146,6 +146,24 @@ class RuntimeKnobs(NamedTuple):
     sym_win_ticks: jax.Array
     sym_start_tick: jax.Array
     pq_on: jax.Array             # 0/1 gate: strict-priority override
+
+
+class SimState(NamedTuple):
+    """The public checkpoint/resume carry of a simulation in flight.
+
+    A pure pytree of device arrays: the tick cursor plus the *full* engine
+    scan carry (:class:`~repro.core.netsim.stages.EngineState` — slot,
+    instance, link, Symphony, and job state, including the CC PRNG key).
+    Produced by ``simulator.init_state``, advanced by
+    ``simulator.run_window`` / ``control.SimController.step``, and
+    serializable with ``jax.device_get`` — resuming from a checkpointed
+    ``SimState`` is bit-for-bit identical to having never paused.
+
+    ``engine`` is typed ``Any`` only to avoid a circular import with
+    :mod:`.stages`; it is always an ``EngineState``.
+    """
+    tick: jax.Array      # i32 scalar: the next tick to execute
+    engine: Any          # stages.EngineState — the full tick carry
 
 
 class EngineParams(NamedTuple):

@@ -82,18 +82,21 @@ import numpy as np
 
 from repro import compat
 
-from .params import (RuntimeKnobs, SimParams, SimStructure, grid_from_params,
-                     merge_params, stack_knobs)
+from .params import (RuntimeKnobs, SimParams, SimState, SimStructure,
+                     grid_from_params, merge_params, stack_knobs)
 from .stages import (BIG, I32MAX, WIRE_SEG, EngineState, WLArrays,  # noqa: F401
-                     BACKENDS, SHARE_POLICIES, engine_tick, init_state,
+                     BACKENDS, SHARE_POLICIES, engine_tick,
+                     init_state as engine_init_state,
                      make_ctx, resolve_backend, resolve_share_policy)
 from .topology import LEVEL_SPINE, LEVEL_TOR, Topology
 from .workload import (Workload, balanced_choice, ecmp_choice, path_table_for,
                        routes_for)
 
 __all__ = [
-    "SimParams", "SimStructure", "RuntimeKnobs", "SimResult", "Static",
+    "SimParams", "SimStructure", "RuntimeKnobs", "SimResult", "SimState",
+    "Static", "WindowSamples",
     "simulate", "simulate_seeds", "simulate_grid", "simulate_core",
+    "init_state", "run_window",
     "build_static", "link_domains", "grid_from_params", "stack_knobs",
     "core_trace_count", "resolve_grid_mesh", "GRID_AXIS",
 ]
@@ -114,6 +117,19 @@ class SimResult(NamedTuple):
     ts_alpha_max: jax.Array        # [T]    max Symphony alpha over ports
     # batched entry points prepend leading axes: [S, ...] for
     # simulate_seeds, [K, S, ...] for simulate_grid.
+
+
+class WindowSamples(NamedTuple):
+    """The sampled series of one :func:`run_window` call: the same six
+    ``ts_*`` series as :class:`SimResult`, but covering only that window's
+    ``n_ticks // record_every`` record periods.  Concatenating the windows
+    of a split run reproduces the one-shot series exactly."""
+    ts_min_wire: jax.Array         # [T, J]
+    ts_max_wire: jax.Array         # [T, J]
+    ts_done_min: jax.Array         # [T, J]
+    ts_throughput: jax.Array       # [T, J]
+    ts_qmax: jax.Array             # [T]
+    ts_alpha_max: jax.Array        # [T]
 
 
 class Static(NamedTuple):
@@ -214,6 +230,9 @@ def wl_arrays(wl: Workload, dt: float) -> WLArrays:
         start_ticks=jnp.asarray(np.round(wl.start_time / dt), jnp.int32),
         step_offset=jnp.asarray(wl.step_offset),
         fstart_ticks=jnp.asarray(np.round(wl.flow_start / dt), jnp.int32),
+        trig_job=jnp.asarray(wl.trig_job, jnp.int32),
+        trig_seg=jnp.asarray(wl.trig_seg, jnp.int32),
+        trig_delay_ticks=jnp.asarray(np.round(wl.trig_delay / dt), jnp.int32),
     )
 
 
@@ -228,21 +247,25 @@ def core_trace_count() -> int:
     return _TRACES["core"]
 
 
-def _core_impl(st: Static, wl: WLArrays, struct: SimStructure,
-               knobs: RuntimeKnobs, key: jax.Array) -> SimResult:
-    """The engine body: shared by the single-run and grid jit wrappers.
+def _window_body(ctx, cfg, sim: SimState, n_ticks: int):
+    """Advance the engine ``n_ticks`` ticks from ``sim``, sampling every
+    ``record_every`` ticks.  This is the ONE windowed engine body: the
+    closed-form `_core_impl` runs it once from tick 0 for the whole
+    horizon, and `run_window` re-enters it from any checkpointed
+    :class:`~repro.core.netsim.params.SimState` — both through the same
+    record-period scan, so a split run replays the identical per-tick
+    program (tick indices are re-based on the traced ``sim.tick`` cursor,
+    which only ever feeds integer gates, never float operands).
+
     Executed once per trace, so it doubles as the compile counter."""
     _TRACES["core"] += 1
-    cfg = merge_params(struct, knobs)
-    resolve_share_policy(cfg)        # fail fast on unknown policy names
-    ctx = make_ctx(st, wl, cfg.window)
-    state0 = init_state(ctx, key)
 
     def tick_fn(state, tick):
         return engine_tick(ctx, cfg, state, tick)
 
     R = cfg.record_every
-    n_rec = cfg.n_ticks // R
+    n_rec = n_ticks // R
+    tick0 = sim.tick
 
     w = int(getattr(cfg, "tick_window", 1) or 1)
     if w < 1:
@@ -268,7 +291,7 @@ def _core_impl(st: Static, wl: WLArrays, struct: SimStructure,
         n_full, rem = divmod(R, w)
 
         def rec_body(state, r):
-            base = r * R
+            base = tick0 + r * R
             sample = None
             if n_full:
                 def win(state, j):
@@ -283,15 +306,28 @@ def _core_impl(st: Static, wl: WLArrays, struct: SimStructure,
             return state, sample
     else:
         def rec_body(state, r):
-            ticks = r * R + jnp.arange(R)
+            ticks = tick0 + r * R + jnp.arange(R)
             state, samples = jax.lax.scan(tick_fn, state, ticks)
             return state, jax.tree.map(lambda x: x[-1], samples)
 
-    state, samples = jax.lax.scan(rec_body, state0, jnp.arange(n_rec))
+    state, samples = jax.lax.scan(rec_body, sim.engine, jnp.arange(n_rec))
+    sim = SimState(tick=tick0 + jnp.int32(n_rec * R), engine=state)
+    return sim, samples
+
+
+def _core_impl(st: Static, wl: WLArrays, struct: SimStructure,
+               knobs: RuntimeKnobs, key: jax.Array) -> SimResult:
+    """The closed-form engine body: init + one full-horizon window.
+    Shared by the single-run and grid jit wrappers."""
+    cfg = merge_params(struct, knobs)
+    resolve_share_policy(cfg)        # fail fast on unknown policy names
+    ctx = make_ctx(st, wl, cfg.window)
+    sim0 = SimState(tick=jnp.int32(0), engine=engine_init_state(ctx, key))
+    sim, samples = _window_body(ctx, cfg, sim0, cfg.n_ticks)
     min_w, max_w, done_min, tput, qmax, alph = samples
     return SimResult(
-        finish_ticks=state.finish,
-        job_finish_ticks=state.job_finish,
+        finish_ticks=sim.engine.finish,
+        job_finish_ticks=sim.engine.job_finish,
         ts_min_wire=min_w, ts_max_wire=max_w, ts_done_min=done_min,
         ts_throughput=tput, ts_qmax=qmax, ts_alpha_max=alph,
     )
@@ -465,6 +501,88 @@ def _check_pq_conflict(struct: SimStructure, pq_on) -> None:
             f"pq_on=True conflicts with share_policy="
             f"{struct.share_policy!r}; use pq only over a "
             "proportional-base structure")
+
+
+# ---------------------------------------------- windowed checkpoint / resume
+def _window_lanes(sts: Static, wl: WLArrays, kns: RuntimeKnobs,
+                  sims: SimState, *, struct: SimStructure,
+                  n_ticks: int):
+    """vmap the windowed engine body over a flat lane axis — the same
+    per-lane program structure as `_lanes_impl`, so windowed lanes stay
+    bitwise-consistent with closed-form grid lanes."""
+    def one(st, kn, sim):
+        cfg = merge_params(struct, kn)
+        ctx = make_ctx(st, wl, cfg.window)
+        return _window_body(ctx, cfg, sim, n_ticks)
+
+    return jax.vmap(one)(sts, kns, sims)
+
+
+_window_core = functools.partial(
+    jax.jit, static_argnames=("struct", "n_ticks"))(_window_lanes)
+
+
+def init_state(st: Static, wl: WLArrays, struct: SimStructure,
+               key: jax.Array | int = 0) -> SimState:
+    """Build the tick-0 :class:`~repro.core.netsim.params.SimState` of a
+    simulation: the public checkpoint that :func:`run_window` advances.
+
+    ``key`` seeds the DCQCN coin flips — pass the ``jax.random.PRNGKey``
+    you would hand :func:`simulate_core` (an int is promoted for you).
+    """
+    if struct.share_policy not in SHARE_POLICIES:
+        raise ValueError(
+            f"unknown share policy {struct.share_policy!r}; "
+            f"have {sorted(SHARE_POLICIES)}")
+    if not isinstance(key, jax.Array):
+        key = jax.random.PRNGKey(int(key))
+    ctx = make_ctx(st, wl, struct.window)
+    return SimState(tick=jnp.int32(0), engine=engine_init_state(ctx, key))
+
+
+def run_window(st: Static, wl: WLArrays, struct: SimStructure,
+               knobs: RuntimeKnobs, state: SimState, n_ticks: int
+               ) -> tuple[SimState, WindowSamples]:
+    """Advance a checkpointed simulation by ``n_ticks`` ticks.
+
+    The windowed core of the engine: one ``lax.scan`` chunk, compiled
+    once per ``(struct, n_ticks)`` and reused across calls — knob value
+    changes between windows never retrace (the PR-2 contract), so an
+    online controller can retune :class:`RuntimeKnobs` every window for
+    free.  ``n_ticks`` must be a positive multiple of
+    ``struct.record_every`` (windows never split a record period, which
+    is what makes split-run sample series concatenate exactly).
+
+    Dispatches as a 1-lane vmapped program (like every other entry
+    point), so resumed runs are bit-for-bit identical to one-shot
+    :func:`simulate` outputs: integer outputs and ``ts_alpha_max``
+    match exactly, including under the fused pallas backend with
+    ``tick_window``/``blk`` tiling active.
+
+    Returns ``(state', samples)`` where ``samples`` is a
+    :class:`WindowSamples` covering this window's record periods.
+    """
+    _check_pq_conflict(struct, knobs.pq_on)
+    if struct.backend not in BACKENDS:
+        raise ValueError(
+            f"unknown tick backend {struct.backend!r}; have {BACKENDS}")
+    if struct.share_policy not in SHARE_POLICIES:
+        raise ValueError(
+            f"unknown share policy {struct.share_policy!r}; "
+            f"have {sorted(SHARE_POLICIES)}")
+    R = struct.record_every
+    n_ticks = int(n_ticks)
+    if n_ticks <= 0 or n_ticks % R:
+        raise ValueError(
+            f"n_ticks must be a positive multiple of record_every={R} "
+            f"(samples are taken on the record grid), got {n_ticks}")
+    sim, samples = _window_core(
+        jax.tree.map(lambda x: x[None], st), wl,
+        jax.tree.map(lambda x: x[None], knobs),
+        jax.tree.map(lambda x: x[None], state),
+        struct=struct, n_ticks=n_ticks)
+    return (jax.tree.map(lambda x: x[0], sim),
+            WindowSamples(*(x[0] for x in samples)))
 
 
 # ------------------------------------------------------------ entry points

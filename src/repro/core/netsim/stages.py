@@ -63,6 +63,8 @@ class WLArrays(NamedTuple):
     n_phases: jax.Array; n_segs: jax.Array; chunk_sched: jax.Array
     gap_ticks: jax.Array; start_ticks: jax.Array
     step_offset: jax.Array; fstart_ticks: jax.Array
+    # dependency-triggered arrivals (all [J] i32; trig_job=-1 => fixed start)
+    trig_job: jax.Array; trig_seg: jax.Array; trig_delay_ticks: jax.Array
 
 
 class EngineState(NamedTuple):
@@ -163,7 +165,11 @@ def init_state(ctx: EngineCtx, key: jax.Array) -> EngineState:
         s_cnt=jnp.zeros(DJ, jnp.float32),
         s_cntop=jnp.zeros(DJ, jnp.float32),
         seg_idx=jnp.zeros(J, jnp.int32),
-        seg_ready=wl.start_ticks + wl.gap_ticks,
+        # Triggered jobs hold at the I32MAX sentinel until stage_segments
+        # releases them (dependency satisfied); fixed-start jobs keep the
+        # legacy start+gap release tick.
+        seg_ready=jnp.where(wl.trig_job >= 0, I32MAX,
+                            wl.start_ticks + wl.gap_ticks),
         job_finish=jnp.full(J, I32MAX, jnp.int32),
         key=key,
     )
@@ -582,6 +588,16 @@ def stage_segments(ctx: EngineCtx, state: EngineState, done_upto, tick):
     job_finish = jnp.where((seg_idx >= wl.n_segs) &
                            (state.job_finish == I32MAX),
                            tick, state.job_finish)
+    # Dependency-triggered arrivals: a pending job (seg_ready still at the
+    # I32MAX sentinel) is released once its trigger job's segment barrier
+    # has advanced past the required count.  Integer-only, so untriggered
+    # workloads (trig_job == -1 everywhere) stay bit-for-bit unchanged.
+    trig_src = jnp.clip(wl.trig_job, 0, J - 1)
+    fired = (wl.trig_job >= 0) & (state.seg_ready == I32MAX) & \
+            (seg_idx[trig_src] >= wl.trig_seg)
+    seg_ready = jnp.where(fired,
+                          tick + wl.trig_delay_ticks + wl.gap_ticks,
+                          seg_ready)
     return seg_idx, seg_ready, job_finish
 
 

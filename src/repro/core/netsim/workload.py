@@ -29,6 +29,20 @@ allreduce is 2*log2(N) single-step phases with geometrically shrinking
 chunks (:meth:`WorkloadBuilder.add_halving_doubling_job`), and hierarchical
 allreduce is 3 phases — intra-group ring reduce-scatter, inter-group leader
 ring, intra-group ring allgather (:meth:`WorkloadBuilder.add_hierarchical_job`).
+
+Arrivals: fixed vs dependency-triggered
+---------------------------------------
+Jobs arrive either at a fixed ``start_time`` or via a **trigger rule**
+(:meth:`WorkloadBuilder.set_trigger`): job j starts when job i completes
+its c-th collective (plus an optional delay) — the CCL-Simulator-style
+dependency-triggered injection.  Triggers are lowered to three traced
+``[J]`` arrays (``trig_job`` / ``trig_seg`` / ``trig_delay``) that the
+engine evaluates inside the tick (`stages.stage_segments`), so triggered
+multi-tenant workloads run unchanged under the one-compile grid/shard
+executors and the windowed checkpoint/resume core.
+:meth:`WorkloadBuilder.add_poisson_churn` layers continuous tenant churn
+on top: Poisson job arrivals over a host pool, each tenant departing when
+its finite pass budget completes.
 """
 from __future__ import annotations
 
@@ -60,6 +74,21 @@ class Workload:
     chunk_sched: np.ndarray  # [J, max_segments] bytes per chunk in that segment
     compute_gap: np.ndarray  # [J] seconds inserted before each pass
     start_time: np.ndarray   # [J] job arrival time (s)
+    # --- dependency-triggered arrivals (set_trigger; -1 = fixed start) ---
+    trig_job: np.ndarray = None    # [J] job whose progress releases this one
+    trig_seg: np.ndarray = None    # [J] segment count of trig_job to wait for
+    trig_delay: np.ndarray = None  # [J] seconds between trigger and release
+
+    def __post_init__(self):
+        # Workloads built before the trigger fields existed (or constructed
+        # directly in tests) default to all-fixed starts.
+        J = int(self.n_phases.shape[0])
+        if self.trig_job is None:
+            object.__setattr__(self, "trig_job", np.full(J, -1, np.int32))
+        if self.trig_seg is None:
+            object.__setattr__(self, "trig_seg", np.zeros(J, np.int32))
+        if self.trig_delay is None:
+            object.__setattr__(self, "trig_delay", np.zeros(J, np.float64))
 
     @property
     def n_flows(self) -> int:
@@ -112,6 +141,8 @@ class WorkloadBuilder:
                             "off", "fstart")}
         self._jobs: dict[str, list] = {k: [] for k in
                                        ("n_phases", "n_passes", "gap", "start", "chunks")}
+        # job_id -> (after_job, collectives | None, delay_s)
+        self._trigs: dict[int, tuple[int, int | None, float]] = {}
 
     def _pad_flow_defaults(self):
         n = len(self._flows["src"])
@@ -329,6 +360,65 @@ class WorkloadBuilder:
         self._jobs["chunks"].append(seg_chunks)
         return job_id
 
+    def set_trigger(self, job: int, after_job: int, collectives: int | None = None,
+                    delay: float = 0.0) -> None:
+        """Make ``job`` a dependency-triggered arrival: it is released when
+        ``after_job`` completes its ``collectives``-th collective (pass),
+        plus ``delay`` seconds.  ``collectives=None`` waits for the whole
+        job (every pass) — chained tenant hand-off.
+
+        The trigger replaces the fixed ``start_time``: the engine holds the
+        job's segment barrier closed (``seg_ready = INT32_MAX``) until the
+        dependency fires *inside the simulation*, so trigger evaluation is
+        traced and works unchanged under vmap/grids and windowed resume.
+        """
+        J = len(self._jobs["n_passes"])
+        if not 0 <= job < J or not 0 <= after_job < J:
+            raise ValueError(f"trigger references unknown job ({job}, "
+                             f"{after_job}); have {J} jobs")
+        if job == after_job:
+            raise ValueError(f"job {job} cannot trigger on itself")
+        if collectives is not None and collectives < 1:
+            raise ValueError(f"collectives must be >= 1, got {collectives}")
+        if delay < 0:
+            raise ValueError(f"trigger delay must be >= 0, got {delay}")
+        self._trigs[job] = (after_job, collectives, float(delay))
+
+    def add_poisson_churn(self, host_groups, rate_hz: float, horizon_s: float,
+                          ring_size: int | None = None,
+                          chunk_bytes: float = 4e6, passes: int = 1,
+                          seed: int = 0, max_jobs: int | None = None
+                          ) -> list[int]:
+        """Continuous tenant churn: Poisson job *arrivals* over a pool of
+        host groups, each tenant *departing* when its finite ``passes``
+        budget completes.  Arrival k lands on ``host_groups[k % G]`` (a
+        tenant's host allocation) at the k-th Poisson event time; times are
+        sampled host-side from ``seed`` so the workload is reproducible and
+        lowers to plain traced start-tick arrays — the whole churn replay
+        runs under one compile of the engine.
+
+        Returns the job ids in arrival order.
+        """
+        if rate_hz <= 0 or horizon_s <= 0:
+            raise ValueError(f"need rate_hz > 0 and horizon_s > 0, got "
+                             f"({rate_hz}, {horizon_s})")
+        groups = [np.asarray(g, np.int32) for g in host_groups]
+        if not groups:
+            raise ValueError("empty host_groups")
+        rng = np.random.default_rng(seed)
+        jobs, t, k = [], 0.0, 0
+        while True:
+            t += float(rng.exponential(1.0 / rate_hz))
+            if t >= horizon_s or (max_jobs is not None and k >= max_jobs):
+                break
+            g = groups[k % len(groups)]
+            rs = len(g) if ring_size is None else min(ring_size, len(g))
+            jobs.append(self.add_ring_job(
+                hosts=g, ring_size=rs, chunk_bytes=chunk_bytes,
+                passes=passes, barrier=False, start_time=t))
+            k += 1
+        return jobs
+
     def build(self) -> Workload:
         self._pad_flow_defaults()
         max_seg = max(len(c) for c in self._jobs["chunks"])
@@ -344,6 +434,18 @@ class WorkloadBuilder:
             sched[j, :len(c)] = c
             if len(c) < max_seg:           # pad with last value (unused segs)
                 sched[j, len(c):] = c[-1]
+        trig_job = np.full(J, -1, np.int32)
+        trig_seg = np.zeros(J, np.int32)
+        trig_delay = np.zeros(J, np.float64)
+        for j, (after, colls, delay) in self._trigs.items():
+            n_segs = len(self._jobs["chunks"][after])
+            nph = self._jobs["n_phases"][after]
+            want = n_segs if colls is None else colls * nph
+            if want > n_segs:
+                raise ValueError(
+                    f"job {j} triggers on collective {colls} of job {after}, "
+                    f"which only runs {n_segs // nph} collectives")
+            trig_job[j], trig_seg[j], trig_delay[j] = after, want, delay
         return Workload(
             src=np.asarray(self._flows["src"], np.int32),
             dst=np.asarray(self._flows["dst"], np.int32),
@@ -359,6 +461,7 @@ class WorkloadBuilder:
             chunk_sched=sched,
             compute_gap=np.asarray(self._jobs["gap"], np.float64),
             start_time=np.asarray(self._jobs["start"], np.float64),
+            trig_job=trig_job, trig_seg=trig_seg, trig_delay=trig_delay,
         )
 
 

@@ -1,0 +1,151 @@
+"""Direct unit tests for `repro.core.netsim.metrics`.
+
+The metrics module was previously exercised only through the benchmark
+scripts; these tests pin its semantics on hand-built SimResult-shaped
+inputs (no simulation runs needed) plus one tiny end-to-end run for the
+masked-throughput contract.
+"""
+import numpy as np
+import pytest
+
+from repro.core.netsim import (SimParams, SimResult, WorkloadBuilder,
+                               make_leaf_spine, metrics, simulate)
+from repro.core.netsim.simulator import I32MAX, WindowSamples
+
+
+def _res(**kw):
+    """A hand-built single-run SimResult (J=2 jobs, T=4 samples)."""
+    base = dict(
+        finish_ticks=np.asarray([40, 50, 60, 70,          # job 0 flows
+                                 80, 80, 80, 80], np.int32),  # job 1 flows
+        job_finish_ticks=np.asarray([70, I32MAX], np.int32),
+        ts_min_wire=np.asarray([[0, 0], [1, 0], [3, 0], [5, 0]], np.int32),
+        ts_max_wire=np.asarray([[1, -1], [3, -1], [5, -1], [7, -1]], np.int32),
+        ts_done_min=np.asarray([[0, 0], [1, 0], [2, 0], [4, 0]], np.int32),
+        ts_throughput=np.asarray(
+            [[1e9, 0.0], [2e9, 0.0], [4e9, 0.0], [1e9, 0.0]], np.float32),
+        ts_qmax=np.asarray([0.0, 3e4, 1e4, 0.0], np.float32),
+        ts_alpha_max=np.asarray([1.0, 2.5, 1.5, 1.0], np.float32),
+    )
+    base.update(kw)
+    return SimResult(**base)
+
+
+def _wl2():
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(4)), ring_size=4, chunk_bytes=1e6,
+                   passes=1, barrier=False)
+    b.add_ring_job(hosts=list(range(4, 8)), ring_size=4, chunk_bytes=1e6,
+                   passes=1, barrier=False, start_time=2e-4)
+    return b.build()
+
+
+def test_cct_seconds_masks_unfinished_and_subtracts_start():
+    wl = _wl2()
+    cfg = SimParams(n_ticks=100, window=8)
+    res = _res()
+    cct = metrics.cct_seconds(res, wl, cfg)
+    # job 0: finish tick 70, started at t=0
+    assert cct[0] == pytest.approx(70 * cfg.dt)
+    # job 1 never finished -> nan
+    assert np.isnan(cct[1])
+    # a finished job 1 subtracts its 2e-4 s arrival time
+    res2 = _res(job_finish_ticks=np.asarray([70, 50], np.int32))
+    cct2 = metrics.cct_seconds(res2, wl, cfg)
+    assert cct2[1] == pytest.approx(50 * cfg.dt - 2e-4)
+
+
+def test_overlap_series_and_max():
+    cfg = SimParams(n_ticks=80, window=8, record_every=20)
+    res = _res()
+    t, ov = metrics.overlap_series(res, cfg, job=0)
+    # overlap = max_wire - min_wire + 1 where active
+    assert ov.tolist() == [2, 3, 3, 3]
+    assert t[0] == pytest.approx(cfg.record_every * cfg.dt)
+    assert t[-1] == pytest.approx(4 * cfg.record_every * cfg.dt)
+    # job 1 never has an active step (max_wire = -1 sentinel)
+    _, ov1 = metrics.overlap_series(res, cfg, job=1)
+    assert ov1.tolist() == [0, 0, 0, 0]
+    assert metrics.max_overlap(res, cfg, job=0) == 3
+
+
+def test_step_completion_times():
+    cfg = SimParams(n_ticks=80, window=8, record_every=20)
+    times = metrics.step_completion_times(_res(), cfg, job=0)
+    # done_min advanced 0->1->2->4: one step at samples 1 and 2, two at 3
+    t = (np.arange(4) + 1.0) * cfg.record_every * cfg.dt
+    assert times.tolist() == pytest.approx([t[1], t[2], t[3], t[3]])
+
+
+def test_flow_span_seconds():
+    wl = _wl2()
+    cfg = SimParams(n_ticks=100, window=8)
+    # job 0 owns flows 0..3 (ticks 40..70): span 30 ticks
+    span = metrics.flow_span_seconds(_res(), wl, cfg, job=0)
+    assert span == pytest.approx(30 * cfg.dt)
+
+
+def test_ideal_cct_serial_steps():
+    wl = _wl2()
+    # ring of 4, 1 pass, no barrier: 1 segment of 2*(4-1)*1 = 6 serial
+    # steps, each moving one chunk_bytes-sized chunk per member
+    link = 100e9
+    got = metrics.ideal_cct(wl, job=0, link_bps=link)
+    assert got == pytest.approx(6 * 1e6 / link)
+    # compute gaps add passes * gap seconds
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(4)), ring_size=4, chunk_bytes=1e6,
+                   passes=2, barrier=True, compute_gap=1e-3)
+    wl2 = b.build()
+    assert metrics.ideal_cct(wl2, job=0, link_bps=link) == pytest.approx(
+        2 * 6 * 1e6 / link + 2 * 1e-3)
+
+
+def test_window_summary_reductions():
+    cfg = SimParams(n_ticks=80, window=8, record_every=20)
+    r = _res()
+    stats = metrics.window_summary(
+        WindowSamples(ts_min_wire=r.ts_min_wire, ts_max_wire=r.ts_max_wire,
+                      ts_done_min=r.ts_done_min,
+                      ts_throughput=r.ts_throughput,
+                      ts_qmax=r.ts_qmax, ts_alpha_max=r.ts_alpha_max))
+    assert stats.alpha_max == pytest.approx(2.5)       # max over window
+    assert stats.alpha_last == pytest.approx(1.0)      # final sample
+    assert stats.qmax == pytest.approx(3e4)
+    assert stats.q_last == pytest.approx(0.0)
+    assert stats.tput == pytest.approx([2e9, 0.0])     # window mean per job
+    assert stats.tput_last == pytest.approx([1e9, 0.0])
+    assert stats.done_min.tolist() == [4, 0]
+    assert stats.overlap.tolist() == [3, 0]            # idle job -> 0
+
+
+def test_ts_throughput_masked_per_job_sum():
+    """The engine's ts_throughput is the per-job sum of delivered bytes/s:
+    job masks partition the total, and a job that has finished (or not
+    started) contributes zero."""
+    topo = make_leaf_spine(8, 2, 2)
+    b = WorkloadBuilder()
+    b.add_ring_job(hosts=list(range(4)), ring_size=4, chunk_bytes=1e6,
+                   passes=1, barrier=False)
+    b.add_ring_job(hosts=list(range(4, 8)), ring_size=4, chunk_bytes=2e6,
+                   passes=1, barrier=False)
+    wl = b.build()
+    cfg = SimParams(n_ticks=1_500, window=8, record_every=10)
+    res = simulate(topo, wl, cfg, routing="ecmp", seed=0)
+    tput = np.asarray(res.ts_throughput)               # [T, J]
+    assert tput.shape == (150, 2)
+    assert (tput >= 0).all() and np.isfinite(tput).all()
+    jf = np.asarray(res.job_finish_ticks)
+    assert (jf != I32MAX).all()
+    # after a job finishes, its throughput samples are exactly zero
+    for j in range(2):
+        done_sample = int(jf[j]) // cfg.record_every + 1
+        assert tput[done_sample:, j] == pytest.approx(0.0)
+        assert tput[:done_sample, j].max() > 0
+    # total delivered bytes per job ~ the volume the ring actually moves
+    # (4 members x 6 steps x one chunk each; the sampled-rate integral
+    # carries record-grid quantization error)
+    for j, chunk in ((0, 1e6), (1, 2e6)):
+        delivered = float(tput[:, j].sum()) * cfg.record_every * cfg.dt
+        moved = 6 * 4 * chunk
+        assert delivered == pytest.approx(moved, rel=0.1)
